@@ -1,0 +1,28 @@
+"""Shared benchmark helpers: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (us) of a jitted call (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows):
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    for name, us, derived in rows:
+        us_s = f"{us:.1f}" if isinstance(us, (int, float)) else us
+        print(f"{name},{us_s},{derived}")

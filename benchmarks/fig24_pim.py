@@ -1,0 +1,24 @@
+"""Fig 24: the ISAAC -> Helix scheme ladder from the analytical PIM model."""
+from repro.core import pim
+
+
+def run():
+    rows = []
+    lad = pim.ladder()
+    for name in pim.SCHEMES:
+        v = lad[name]
+        rows.append((f"fig24/{name}/throughput", "-",
+                     f"{v['throughput_x']:.2f}x_ISAAC"))
+        rows.append((f"fig24/{name}/per_watt", "-", f"{v['per_watt_x']:.2f}x"))
+        rows.append((f"fig24/{name}/per_mm2", "-", f"{v['per_mm2_x']:.2f}x"))
+    h = lad["Helix"]
+    rows.append(("fig24/paper_check", "-",
+                 f"throughput {h['throughput_x']:.1f}x (paper 6x), "
+                 f"perW {h['per_watt_x']:.1f}x (paper 11.9x), "
+                 f"permm2 {h['per_mm2_x']:.1f}x (paper 7.5x)"))
+    rows.append(("fig24/power_area", "-",
+                 f"ISAAC {pim.chip_power_area('cmos',8)[0]:.1f}W/"
+                 f"{pim.chip_power_area('cmos',8)[1]:.1f}mm2 vs Helix "
+                 f"{pim.chip_power_area('sot', comparators=True)[0]:.1f}W/"
+                 f"{pim.chip_power_area('sot', comparators=True)[1]:.1f}mm2"))
+    return rows

@@ -1,0 +1,17 @@
+"""Fig 25: SOT-MRAM ADC arrays vs low-resolution CMOS ADCs."""
+from repro.core import pim
+
+
+def run():
+    rows = []
+    helix = pim.scheme("Helix", "guppy")
+    for bits, paper_pw, paper_pm in ((5, 27.9, 21.8), (6, 37.3, 21.3)):
+        cmos = pim.scheme(f"cmos{bits}", "guppy")
+        pw = ((helix.throughput / helix.power_w)
+              / (cmos.throughput / cmos.power_w) - 1) * 100
+        pm = ((helix.throughput / helix.area_mm2)
+              / (cmos.throughput / cmos.area_mm2) - 1) * 100
+        rows.append((f"fig25/sot_vs_cmos{bits}", "-",
+                     f"perW +{pw:.1f}% (paper +{paper_pw}%) "
+                     f"permm2 +{pm:.1f}% (paper +{paper_pm}%)"))
+    return rows

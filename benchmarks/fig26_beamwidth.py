@@ -1,0 +1,12 @@
+"""Fig 26: CTC-scheme gain grows with beam-search width."""
+from repro.core import pim
+
+
+def run():
+    rows = []
+    for w in (5, 10, 20, 40):
+        adc = pim.scheme("ADC", "guppy", beam_width=w)
+        ctc = pim.scheme("CTC", "guppy", beam_width=w)
+        rows.append((f"fig26/width_{w}", "-",
+                     f"CTC_over_ADC={adc.time/ctc.time:.2f}x"))
+    return rows

@@ -1,0 +1,35 @@
+"""Fig 7: quantized-matmul throughput vs bit-width.
+
+On CPU we measure the real int8-container kernel (interpret-mode Pallas is
+Python-speed, so the jnp oracle path stands in for kernel timing) against
+the fp32 matmul; the derived column reports the speedup and the fake-quant
+accuracy cost at each width — the trend the figure shows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from ._util import time_call
+
+M, K, N = 256, 512, 256
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+    f32 = jax.jit(lambda a, b: a @ b)
+    t_f32 = time_call(f32, x, w)
+    rows = [("fig7/matmul_f32", t_f32, "baseline")]
+    qmm = jax.jit(quant_matmul_ref)
+    for bits in (16, 8, 5, 4):
+        xq, sx = quant.pack_act(x, bits)
+        wq, sw = quant.pack_weight(w, bits)
+        t = time_call(qmm, xq, sx, wq, sw)
+        err = float(jnp.abs(quant_matmul_ref(xq, sx, wq, sw) - x @ w).max()
+                    / jnp.abs(x @ w).max())
+        rows.append((f"fig7/matmul_int_{bits}b", t,
+                     f"speedup={t_f32/t:.2f}x relerr={err:.4f}"))
+    return rows

@@ -1,0 +1,51 @@
+"""Fig 9: execution-time breakdown of the quantized base-calling pipeline
+(DNN vs CTC decode vs read vote), measured on our CPU implementation.
+Paper (GPU, 16-bit Guppy): DNN 46.3 %, CTC 16.7 %, vote 37 %.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ctc as ctc_lib
+from repro.core import voting
+from repro.core.quant import QuantConfig
+from repro.data import genome
+from repro.models import basecaller as bc
+from ._util import time_call
+
+B = 8
+
+
+def run():
+    cfg = bc.tiny_preset("guppy").with_quant(
+        QuantConfig(enabled=True, bits_w=5, bits_a=5))
+    params = bc.init_basecaller(jax.random.PRNGKey(0), cfg)
+    dcfg = genome.SignalConfig(window=cfg.input_len, max_label_len=48)
+    batch = genome.sample_batch(jax.random.PRNGKey(1), B, dcfg)
+
+    dnn = jax.jit(lambda p, s: bc.apply_basecaller(p, s, cfg))
+    lp = dnn(params, batch["signal"])
+    t_dnn = time_call(dnn, params, batch["signal"])
+
+    beam = jax.jit(functools.partial(ctc_lib.ctc_beam_search_batch,
+                                     beam_width=10, max_len=48))
+    reads, lens, _ = beam(lp)
+    t_ctc = time_call(beam, lp)
+
+    top = reads[:, 0]
+    toplen = lens[:, 0]
+    grp = jnp.stack([top[: B // 2], top[B // 2:]], axis=1)   # 2-read coverage
+    grplen = jnp.stack([toplen[: B // 2], toplen[B // 2:]], axis=1)
+    vote = jax.jit(functools.partial(voting.vote_batch, span=96))
+    vote(grp, grplen)
+    t_vote = time_call(vote, grp, grplen)
+
+    total = t_dnn + t_ctc + t_vote
+    return [
+        ("fig9/dnn", t_dnn, f"{100*t_dnn/total:.1f}% (paper GPU 46.3%)"),
+        ("fig9/ctc_decode", t_ctc, f"{100*t_ctc/total:.1f}% (paper 16.7%)"),
+        ("fig9/read_vote", t_vote, f"{100*t_vote/total:.1f}% (paper 37%)"),
+        ("fig9/ctc_plus_vote", t_ctc + t_vote,
+         f"{100*(t_ctc+t_vote)/total:.1f}% (paper 53.7%)"),
+    ]

@@ -1,0 +1,76 @@
+"""Render the §Dry-run / §Roofline markdown tables from sweep artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables > tables.md
+"""
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def cells(mesh):
+    out = []
+    for p in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        out.append(json.load(open(p)))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    out.sort(key=lambda c: (c["arch"], order[c["shape"]]))
+    return out
+
+
+def dryrun_table():
+    lines = ["| arch | shape | pod1 | pod2 | mem/chip (pod1) | fits 16G |",
+             "|---|---|---|---|---|---|"]
+    p1 = {(c["arch"], c["shape"]): c for c in cells("pod1")}
+    p2 = {(c["arch"], c["shape"]): c for c in cells("pod2")}
+    for key in p1:
+        a, s = key
+        c1, c2 = p1[key], p2.get(key, {})
+        st1, st2 = c1["status"], c2.get("status", "-")
+        if st1 == "ok":
+            mem = f"{c1['memory']['per_device_bytes']/2**30:.2f} GiB"
+            fits = "yes" if c1["memory"]["fits_v5e_16g"] else "**no**"
+        else:
+            mem = fits = "—"
+        lines.append(f"| {a} | {s} | {st1} | {st2} | {mem} | {fits} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh="pod1"):
+    lines = ["| arch | shape | t_compute | t_memory† | t_collective | "
+             "dominant | MODEL/HLO flops | wire GiB/step |",
+             "|---|---|---|---|---|---|---|---|"]
+    for c in cells(mesh):
+        if c["status"] != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                         f"{c['status']} | — | — |")
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['t_compute_s']:.3g} s | "
+            f"{r['t_memory_s']:.3g} s | {r['t_collective_s']:.3g} s | "
+            f"{r['dominant']} | {c['useful_flops_frac']:.2f} | "
+            f"{c['collective_wire_bytes_loop_aware']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def summary():
+    p1 = cells("pod1")
+    ok = [c for c in p1 if c["status"] == "ok"]
+    fits = sum(c["memory"]["fits_v5e_16g"] for c in ok)
+    doms = {}
+    for c in ok:
+        doms[c["roofline"]["dominant"]] = doms.get(
+            c["roofline"]["dominant"], 0) + 1
+    return (f"pod1 cells: {len(ok)} compiled ok, "
+            f"{sum(c['status'] == 'skipped' for c in p1)} skipped, "
+            f"{fits}/{len(ok)} fit 16 GiB/chip; dominant terms: {doms}")
+
+
+if __name__ == "__main__":
+    print("## Dry-run matrix\n")
+    print(summary() + "\n")
+    print(dryrun_table())
+    print("\n## Roofline (single pod, 256 chips)\n")
+    print(roofline_table("pod1"))

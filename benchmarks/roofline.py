@@ -1,0 +1,51 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-cell table.
+
+Reads benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json (written by
+``python -m repro.launch.dryrun``) and emits one row per cell with the
+three roofline terms, the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs.
+
+NOTE (methodology, see EXPERIMENTS.md §Roofline): XLA's cost analysis
+counts while-loop bodies ONCE (verified empirically), so for scan-stacked
+models the HLO numbers reported here are per-layer-iteration costs plus
+fixed overhead.  The table therefore also reports the analytically exact
+MODEL_FLOPS and the scan trip counts needed to scale HLO terms; the §Perf
+hillclimb uses like-for-like HLO deltas (same loop structure), which are
+unaffected.
+"""
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_cells(mesh="pod1"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run():
+    rows = []
+    for mesh in ("pod1", "pod2"):
+        cells = load_cells(mesh)
+        n_ok = sum(c["status"] == "ok" for c in cells)
+        n_skip = sum(c["status"] == "skipped" for c in cells)
+        n_fail = sum(c["status"] == "failed" for c in cells)
+        rows.append((f"roofline/{mesh}/cells", "-",
+                     f"ok={n_ok} skipped={n_skip} failed={n_fail}"))
+        for c in cells:
+            name = f"roofline/{mesh}/{c['arch']}/{c['shape']}"
+            if c["status"] != "ok":
+                rows.append((name, "-", c["status"]))
+                continue
+            r = c["roofline"]
+            mem = c["memory"]["per_device_bytes"] / 2 ** 30
+            rows.append((
+                name, "-",
+                f"dom={r['dominant']} tc={r['t_compute_s']:.2e}s "
+                f"tm={r['t_memory_s']:.2e}s tx={r['t_collective_s']:.2e}s "
+                f"mem={mem:.2f}GiB useful={c['useful_flops_frac']:.2f}"))
+    return rows

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+aggregation. Prints ``name,us_per_call,derived`` CSV rows.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+import argparse
+import sys
+import traceback
+
+from ._util import emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer training steps for fig21")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (fig7_quant_throughput, fig9_breakdown, fig21_seat,
+                   fig24_pim, fig25_adc, fig26_beamwidth, roofline,
+                   table3_models)
+    suites = [
+        ("table3", table3_models.run),
+        ("fig7", fig7_quant_throughput.run),
+        ("fig9", fig9_breakdown.run),
+        ("fig21", (lambda: fig21_seat.run(steps=40)) if args.quick
+         else fig21_seat.run),
+        ("fig24", fig24_pim.run),
+        ("fig25", fig25_adc.run),
+        ("fig26", fig26_beamwidth.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only != name:
+            continue
+        try:
+            emit(fn())
+        except Exception:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"{name},ERROR,{traceback.format_exc(limit=2)!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

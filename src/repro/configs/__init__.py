@@ -1,0 +1,55 @@
+"""Architecture registry: the paper's base-callers + 10 assigned LM archs.
+
+``get_config(arch_id)`` -> full published config (dry-run / roofline only).
+``get_smoke(arch_id)``  -> reduced same-family config (CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+BASECALLER_IDS = ("guppy", "scrappie", "chiron")
+
+LM_IDS = (
+    "seamless-m4t-large-v2",
+    "qwen2-vl-7b",
+    "hymba-1.5b",
+    "codeqwen1.5-7b",
+    "llama3.2-3b",
+    "h2o-danube-1.8b",
+    "qwen2.5-3b",
+    "olmoe-1b-7b",
+    "llama4-maverick-400b-a17b",
+    "falcon-mamba-7b",
+)
+
+ARCH_IDS = LM_IDS + BASECALLER_IDS
+
+_MODULES = {
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "hymba-1.5b": "hymba_1_5b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "llama3.2-3b": "llama3_2_3b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "guppy": "guppy",
+    "scrappie": "scrappie",
+    "chiron": "chiron",
+}
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str):
+    return _module(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str):
+    return _module(arch_id).smoke_config()

@@ -1,0 +1,7 @@
+"""Chiron base-caller (paper Table 3): conv blocks + bidi LSTM + FC."""
+from repro.models.basecaller import CHIRON as CONFIG
+from repro.models.basecaller import tiny_preset
+
+
+def smoke_config():
+    return tiny_preset("chiron")

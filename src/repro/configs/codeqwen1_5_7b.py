@@ -1,0 +1,22 @@
+"""codeqwen1.5-7b [dense]: qwen1.5 architecture (MHA + QKV bias).
+
+32L d_model=4096 32H (GQA kv=32 == MHA) d_ff=13440 vocab=92416
+[hf:Qwen/CodeQwen1.5-7B].
+"""
+import dataclasses
+
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="codeqwen1.5-7b",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=13440, vocab_size=92416,
+    qkv_bias=True, rope_theta=1e6,
+)
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256, attn_chunk=32, remat=False,
+        act_shard=False)

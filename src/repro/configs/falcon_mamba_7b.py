@@ -1,0 +1,24 @@
+"""falcon-mamba-7b [ssm]: attention-free Mamba-1 stack.
+
+64L d_model=4096 (attn-free) d_ff=0 vocab=65024 ssm_state=16
+[arXiv:2410.05355]. d_inner=8192 (expand 2), dt_rank=256, conv 4.
+long_500k RUNS: O(1) recurrent state per layer.
+"""
+import dataclasses
+
+from repro.models.layers import SSMConfig
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="falcon-mamba-7b",
+    n_layers=64, d_model=4096, n_heads=1, n_kv_heads=1,
+    d_ff=0, vocab_size=65024,
+    block_pattern="mamba", ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+)
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, vocab_size=256,
+        ssm=SSMConfig(d_state=4, d_conv=4, expand=2),
+        remat=False, act_shard=False)

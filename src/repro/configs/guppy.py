@@ -1,0 +1,7 @@
+"""Guppy base-caller (paper Table 3): 1 conv + 5 GRU + FC + CTC."""
+from repro.models.basecaller import GUPPY as CONFIG
+from repro.models.basecaller import tiny_preset
+
+
+def smoke_config():
+    return tiny_preset("guppy")

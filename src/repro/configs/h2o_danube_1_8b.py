@@ -1,0 +1,22 @@
+"""h2o-danube-1.8b [dense]: llama+mistral mix with sliding-window attention.
+
+24L d_model=2560 32H (GQA kv=8) d_ff=6912 vocab=32000 [arXiv:2401.16818].
+head_dim=80. SWA window=4096 => long_500k RUNS with an O(window) ring cache.
+"""
+import dataclasses
+
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="h2o-danube-1.8b",
+    n_layers=24, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=80,
+    d_ff=6912, vocab_size=32000,
+    window=4096, rope_theta=1e4,
+)
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, window=16, attn_chunk=32, remat=False,
+        act_shard=False)

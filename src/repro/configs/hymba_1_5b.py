@@ -1,0 +1,27 @@
+"""hymba-1.5b [hybrid]: parallel attention + Mamba heads in every layer.
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001 ssm_state=16
+[arXiv:2411.13676].  head_dim=64 (25*64=1600).  Sliding-window attention
+(the published model uses SWA in all but 3 layers; we window every layer —
+the parallel SSM path carries global context, see DESIGN.md §5). Meta-token
+prepending is not modeled.  long_500k RUNS: O(window) ring + O(1) SSM state.
+"""
+import dataclasses
+
+from repro.models.layers import SSMConfig
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="hymba-1.5b",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, head_dim=64,
+    d_ff=5504, vocab_size=32001,
+    block_pattern="hybrid", ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    window=1024, rope_theta=1e4,
+)
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, ssm=SSMConfig(d_state=4, d_conv=4, expand=2),
+        window=16, attn_chunk=32, remat=False, act_shard=False)

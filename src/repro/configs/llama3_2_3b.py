@@ -1,0 +1,22 @@
+"""llama3.2-3b [dense]: small llama3.
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256
+[hf:meta-llama/Llama-3.2-3B].
+"""
+import dataclasses
+
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="llama3.2-3b",
+    n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=128256,
+    rope_theta=5e5,
+)
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, attn_chunk=32, remat=False,
+        act_shard=False)

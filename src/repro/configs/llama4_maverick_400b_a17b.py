@@ -1,0 +1,31 @@
+"""llama4-maverick-400b-a17b [moe]: 128-expert top-1 MoE, alternating layers.
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 (expert) vocab=202048, MoE 128e
+top-1 with a shared expert, MoE every OTHER layer (interleave step 2, dense
+layers use d_ff=16384) [hf:meta-llama/Llama-4-Maverick; config arithmetic:
+24*(2*attn + dense_ff + 128e moe + shared) + embeds = ~400B total / ~17B
+active].  Early-fusion multimodality is out of scope (text backbone only).
+long_500k SKIPPED: the published model's 1-in-4 global-attention layers keep
+a full-length KV at 500k (DESIGN.md §5).
+"""
+import dataclasses
+
+from repro.models.layers import MoEConfig
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="llama4-maverick-400b-a17b",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=8192, d_ff_dense=16384, vocab_size=202048,
+    block_pattern="alt_dense_moe",
+    moe=MoEConfig(n_experts=128, top_k=1, shared_expert=True),
+    rope_theta=5e5,
+)
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=32, d_ff_dense=64, vocab_size=256,
+        moe=MoEConfig(n_experts=8, top_k=1, shared_expert=True),
+        attn_chunk=32, remat=False, act_shard=False)

@@ -1,0 +1,24 @@
+"""olmoe-1b-7b [moe]: 64-expert top-8 MoE in every layer.
+
+16L d_model=2048 16H (MHA kv=16) d_ff=1024 (per expert) vocab=50304
+MoE 64e top-8 [arXiv:2409.02060]. ~6.9B total / ~1.3B active.
+"""
+import dataclasses
+
+from repro.models.layers import MoEConfig
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="olmoe-1b-7b",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1024, vocab_size=50304,
+    block_pattern="moe", moe=MoEConfig(n_experts=64, top_k=8),
+    rope_theta=1e4,
+)
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=32, vocab_size=256, moe=MoEConfig(n_experts=8, top_k=2),
+        attn_chunk=32, remat=False, act_shard=False)

@@ -1,0 +1,22 @@
+"""qwen2.5-3b [dense]: GQA with QKV bias, tied embeddings.
+
+36L d_model=2048 16H (GQA kv=2) d_ff=11008 vocab=151936
+[hf:Qwen/Qwen2.5-3B].
+"""
+import dataclasses
+
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="qwen2.5-3b",
+    n_layers=36, d_model=2048, n_heads=16, n_kv_heads=2, head_dim=128,
+    d_ff=11008, vocab_size=151936,
+    qkv_bias=True, tie_embeddings=True, rope_theta=1e6,
+)
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, attn_chunk=32, remat=False,
+        act_shard=False)

@@ -1,0 +1,25 @@
+"""qwen2-vl-7b [vlm]: dense decoder with M-RoPE, dynamic-resolution ViT stub.
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064 [arXiv:2409.12191].
+M-RoPE sections (t,h,w)=(16,24,24) over head_dim=128.  The vision frontend
+is a STUB: input_specs() provides pre-merged patch+text embeddings
+(B, S, 3584); position streams are degenerate (text mode) in the dry-run.
+"""
+import dataclasses
+
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="qwen2-vl-7b",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab_size=152064,
+    qkv_bias=True, mrope_sections=(16, 24, 24), rope_theta=1e6,
+    embed_inputs=False,
+)
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, mrope_sections=(2, 3, 3), attn_chunk=32,
+        remat=False, act_shard=False)

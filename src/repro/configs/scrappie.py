@@ -1,0 +1,7 @@
+"""Scrappie base-caller (paper Table 3): 1 conv(stride 5) + 5 GRU + FC."""
+from repro.models.basecaller import SCRAPPIE as CONFIG
+from repro.models.basecaller import tiny_preset
+
+
+def smoke_config():
+    return tiny_preset("scrappie")

@@ -1,0 +1,27 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec multimodal transformer.
+
+24L d_model=1024 16H (MHA kv=16) d_ff=8192 vocab=256206 [arXiv:2308.11596].
+Interpreted as 24 encoder + 24 decoder layers (the published model pairs a
+24-layer speech encoder with a 24-layer text decoder).  The audio frontend
+(fbank -> conformer adaptor) is a STUB: input_specs() supplies precomputed
+frame embeddings (B, S_enc, 1024).  GELU FF + LayerNorm per the fairseq2
+stack; RoPE replaces learned positions (TPU-era adaptation, DESIGN.md §5).
+"""
+import dataclasses
+
+from repro.models.lm import EncoderConfig, LMConfig
+
+CONFIG = LMConfig(
+    name="seamless-m4t-large-v2",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab_size=256206,
+    encoder=EncoderConfig(n_layers=24),
+    ff_type="gelu", norm_type="ln", rope_theta=1e4,
+)
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=256, encoder=EncoderConfig(n_layers=2), attn_chunk=32,
+        remat=False, act_shard=False)

@@ -1,0 +1,21 @@
+"""Helix core: the paper's algorithmic contributions as composable JAX modules.
+
+- ``ctc``    : CTC loss (forward algorithm), greedy + prefix beam-search decode
+- ``voting`` : longest-match alignment + majority-vote consensus (read voting)
+- ``quant``  : FQN-style fake-quant QAT + integer packing for serving
+- ``seat``   : Systematic-Error-Aware Training loss (Eq. 4)
+- ``pim``    : first-order analytical model of the ISAAC/Helix PIM hardware
+"""
+from repro.core.ctc import (
+    ctc_loss, ctc_loss_batch, ctc_greedy_decode,
+    ctc_beam_search, ctc_beam_search_batch,
+)
+from repro.core.voting import (
+    encode_3bit, equality_matrix, longest_common_substring,
+    align_offsets, consensus_grid, vote, vote_batch, vote_reference,
+)
+from repro.core.quant import (
+    QuantConfig, fake_quant, fq_weight, fq_act, qdense,
+    pack_weight, pack_act, dequant_matmul_reference, tree_fake_quant,
+)
+from repro.core.seat import SEATConfig, seat_loss, consensus_reads, make_views

@@ -1,0 +1,255 @@
+"""Connectionist Temporal Classification: loss, greedy decode, prefix beam search.
+
+The paper's base-callers (Guppy/Scrappie/Chiron) emit per-frame log-probabilities
+over [A, C, G, T, blank]; a CTC decoder maps frames to a read.  Helix's C3
+restructures beam search into dense vector ops so it runs on the matrix engine —
+here everything is expressed as fixed-shape jnp tensor ops under ``lax.scan`` so
+XLA maps it onto the TPU VPU/MXU the same way.
+
+Conventions
+-----------
+* alphabet indices ``0..A-2`` are symbols, ``blank`` defaults to the LAST index
+  (the paper's [A,C,G,T,-] layout with A=5, blank=4).
+* all decode outputs are fixed-shape, padded with ``-1`` beyond ``length``.
+* ``NEG`` is used instead of ``-inf`` so logsumexp gradients stay NaN-free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1.0e9  # "log zero" that keeps gradients finite
+
+
+def _lse2(a, b):
+    return jnp.logaddexp(a, b)
+
+
+def _lse3(a, b, c):
+    return jnp.logaddexp(jnp.logaddexp(a, b), c)
+
+
+# ---------------------------------------------------------------------------
+# CTC loss (log-domain forward algorithm)
+# ---------------------------------------------------------------------------
+
+def ctc_loss(
+    log_probs: jnp.ndarray,
+    labels: jnp.ndarray,
+    label_length: jnp.ndarray | int | None = None,
+    logit_length: jnp.ndarray | int | None = None,
+    blank: int = -1,
+) -> jnp.ndarray:
+    """-ln p(labels | log_probs) for a single example.
+
+    Args:
+      log_probs: (T, A) per-frame log-probabilities (already log-softmaxed).
+      labels: (L,) int32 label ids, padded arbitrarily beyond ``label_length``.
+      label_length: true label length (<= L). Defaults to L.
+      logit_length: true frame count (<= T). Defaults to T.
+      blank: blank id; negative values index from the end (default: last).
+
+    Returns: scalar loss = -log p(labels | inputs).
+    """
+    T, A = log_probs.shape
+    L = labels.shape[0]
+    if blank < 0:
+        blank = A + blank
+    label_length = jnp.asarray(L if label_length is None else label_length, jnp.int32)
+    logit_length = jnp.asarray(T if logit_length is None else logit_length, jnp.int32)
+
+    S = 2 * L + 1
+    s_idx = jnp.arange(S)
+    # extended label sequence: blank interleaved
+    lab_safe = jnp.where(jnp.arange(L) < label_length, labels, 0)
+    ext = jnp.where(s_idx % 2 == 0, blank, lab_safe[jnp.minimum((s_idx - 1) // 2, L - 1)])
+    # skip transition s-2 -> s allowed for non-blank s whose label differs from s-2
+    ext_m2 = jnp.concatenate([jnp.full((2,), -2, ext.dtype), ext[:-2]])
+    allow_skip = (s_idx % 2 == 1) & (ext != ext_m2)
+
+    lp0 = log_probs[0]
+    alpha0 = jnp.full((S,), NEG)
+    alpha0 = alpha0.at[0].set(lp0[blank])
+    if L > 0:
+        alpha0 = alpha0.at[1].set(jnp.where(label_length > 0, lp0[ext[1]], NEG))
+
+    def step(alpha, lp):
+        a1 = jnp.concatenate([jnp.array([NEG]), alpha[:-1]])
+        a2 = jnp.concatenate([jnp.array([NEG, NEG]), alpha[:-2]])
+        a2 = jnp.where(allow_skip, a2, NEG)
+        new = lp[ext] + _lse3(alpha, a1, a2)
+        return new, new
+
+    _, alphas = jax.lax.scan(step, alpha0, log_probs[1:])
+    alphas = jnp.concatenate([alpha0[None], alphas], axis=0)  # (T, S)
+    alpha_final = alphas[jnp.maximum(logit_length - 1, 0)]
+
+    s_end = 2 * label_length  # last blank
+    ll_pos = alpha_final[jnp.minimum(s_end, S - 1)]
+    ll_pre = jnp.where(label_length > 0,
+                       alpha_final[jnp.clip(s_end - 1, 0, S - 1)], NEG)
+    return -_lse2(ll_pos, ll_pre)
+
+
+def ctc_loss_batch(log_probs, labels, label_lengths=None, logit_lengths=None,
+                   blank: int = -1):
+    """Batched CTC loss, per-example. Shapes: (B,T,A), (B,L), (B,), (B,)."""
+    B, T, A = log_probs.shape
+    L = labels.shape[1]
+    if label_lengths is None:
+        label_lengths = jnp.full((B,), L, jnp.int32)
+    if logit_lengths is None:
+        logit_lengths = jnp.full((B,), T, jnp.int32)
+    f = jax.vmap(functools.partial(ctc_loss, blank=blank))
+    return f(log_probs, labels, label_lengths, logit_lengths)
+
+
+# ---------------------------------------------------------------------------
+# Greedy (best-path) decode
+# ---------------------------------------------------------------------------
+
+def ctc_greedy_decode(log_probs: jnp.ndarray, blank: int = -1,
+                      logit_length=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Best-path decode: argmax per frame, collapse repeats, drop blanks.
+
+    Returns (read (T,), length). ``read`` padded with -1.
+    """
+    T, A = log_probs.shape
+    if blank < 0:
+        blank = A + blank
+    if logit_length is None:
+        logit_length = T
+    logit_length = jnp.asarray(logit_length, jnp.int32)
+
+    path = jnp.argmax(log_probs, axis=-1)  # (T,)
+    prev = jnp.concatenate([jnp.array([-1], path.dtype), path[:-1]])
+    valid_t = jnp.arange(T) < logit_length
+    keep = (path != blank) & (path != prev) & valid_t
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1  # write index per kept frame
+    out = jnp.full((T,), -1, jnp.int32)
+    out = out.at[jnp.where(keep, pos, T)].set(path.astype(jnp.int32), mode="drop")
+    return out, keep.sum().astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# CTC prefix beam search (fixed-shape, vectorized; paper Fig. 4d / §4.3)
+# ---------------------------------------------------------------------------
+
+def ctc_beam_search(
+    log_probs: jnp.ndarray,
+    beam_width: int = 10,
+    blank: int = -1,
+    max_len: int | None = None,
+    logit_length=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prefix beam search over (T, A) log-probs.
+
+    Maintains per-beam (prefix, p_blank, p_nonblank) and at every frame expands
+    each of the W beams with {stay} ∪ {append c : c != blank} — a dense
+    (W × A) candidate tensor (the paper computes exactly this product on its
+    dot-product array, merging equal prefixes on the bit-lines; we merge with a
+    masked logsumexp over an equality matrix).
+
+    Returns (prefixes (W, max_len) padded -1, lengths (W,), scores (W,)),
+    sorted by score descending. scores = log p(prefix).
+    """
+    T, A = log_probs.shape
+    if blank < 0:
+        blank = A + blank
+    if max_len is None:
+        max_len = T
+    if logit_length is None:
+        logit_length = T
+    logit_length = jnp.asarray(logit_length, jnp.int32)
+    W = beam_width
+    nsym = A - 1  # non-blank symbols; ids: all indices != blank
+    sym_ids = jnp.array([c for c in range(A) if c != blank], jnp.int32)  # (nsym,)
+
+    # beam state
+    prefixes = jnp.full((W, max_len), -1, jnp.int32)
+    lengths = jnp.zeros((W,), jnp.int32)
+    p_b = jnp.full((W,), NEG).at[0].set(0.0)   # log p(prefix ends in blank)
+    p_nb = jnp.full((W,), NEG)                 # log p(prefix ends in non-blank)
+
+    C = W * (1 + nsym)  # candidates per step
+
+    def step(state, inp):
+        prefixes, lengths, p_b, p_nb = state
+        lp, t = inp
+        active = t < logit_length
+
+        last = jnp.where(lengths > 0,
+                         prefixes[jnp.arange(W), jnp.maximum(lengths - 1, 0)], -1)
+        tot = _lse2(p_b, p_nb)
+
+        # --- stay candidates (prefix unchanged) ------------------------------
+        stay_pb = tot + lp[blank]
+        stay_pnb = jnp.where(lengths > 0, p_nb + lp[jnp.maximum(last, 0)], NEG)
+
+        # --- extend candidates (append symbol c) -----------------------------
+        # (W, nsym): repeat-char extensions may only come through a blank
+        lp_sym = lp[sym_ids]                                   # (nsym,)
+        is_rep = last[:, None] == sym_ids[None, :]             # (W, nsym)
+        ext_pnb = jnp.where(is_rep, p_b[:, None], tot[:, None]) + lp_sym[None, :]
+        ext_pb = jnp.full((W, nsym), NEG)
+        can_grow = lengths < max_len
+        ext_pnb = jnp.where(can_grow[:, None], ext_pnb, NEG)
+
+        # extended prefixes: append c at position `length`
+        ext_prefix = jnp.broadcast_to(prefixes[:, None, :], (W, nsym, max_len))
+        widx = jnp.minimum(lengths, max_len - 1)
+        ext_prefix = ext_prefix.at[jnp.arange(W)[:, None],
+                                   jnp.arange(nsym)[None, :],
+                                   widx[:, None]].set(
+            jnp.broadcast_to(sym_ids[None, :], (W, nsym)))
+        ext_len = jnp.minimum(lengths + 1, max_len)
+
+        # --- assemble candidate tensors --------------------------------------
+        cand_prefix = jnp.concatenate(
+            [prefixes, ext_prefix.reshape(W * nsym, max_len)], axis=0)  # (C, L)
+        cand_len = jnp.concatenate([lengths, jnp.repeat(ext_len, nsym)], axis=0)
+        cand_pb = jnp.concatenate([stay_pb, ext_pb.reshape(-1)], axis=0)
+        cand_pnb = jnp.concatenate([stay_pnb, ext_pnb.reshape(-1)], axis=0)
+
+        # --- merge identical prefixes (masked logsumexp) ----------------------
+        eq = (cand_len[:, None] == cand_len[None, :]) & jnp.all(
+            cand_prefix[:, None, :] == cand_prefix[None, :, :], axis=-1)  # (C, C)
+        canon = ~jnp.any(eq & (jnp.arange(C)[None, :] < jnp.arange(C)[:, None]),
+                         axis=1)  # first occurrence wins
+        mrg_pb = jax.nn.logsumexp(jnp.where(eq, cand_pb[None, :], NEG), axis=1)
+        mrg_pnb = jax.nn.logsumexp(jnp.where(eq, cand_pnb[None, :], NEG), axis=1)
+        mrg_pb = jnp.where(canon, mrg_pb, NEG)
+        mrg_pnb = jnp.where(canon, mrg_pnb, NEG)
+
+        # --- select top-W -----------------------------------------------------
+        score = _lse2(mrg_pb, mrg_pnb)
+        _, top = jax.lax.top_k(score, W)
+        new_state = (cand_prefix[top], cand_len[top], mrg_pb[top], mrg_pnb[top])
+        # frames past logit_length are no-ops
+        new_state = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(active, n, o), new_state, state)
+        return new_state, None
+
+    ts = jnp.arange(T)
+    (prefixes, lengths, p_b, p_nb), _ = jax.lax.scan(
+        step, (prefixes, lengths, p_b, p_nb), (log_probs, ts))
+
+    score = _lse2(p_b, p_nb)
+    order = jnp.argsort(-score)
+    return prefixes[order], lengths[order], score[order]
+
+
+def ctc_beam_search_batch(log_probs, beam_width=10, blank=-1, max_len=None,
+                          logit_lengths=None):
+    B, T, A = log_probs.shape
+    if logit_lengths is None:
+        logit_lengths = jnp.full((B,), T, jnp.int32)
+
+    def one(lp, ll):
+        return ctc_beam_search(lp, beam_width=beam_width, blank=blank,
+                               max_len=max_len, logit_length=ll)
+
+    return jax.vmap(one)(log_probs, logit_lengths)

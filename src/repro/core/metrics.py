@@ -1,0 +1,33 @@
+"""Base-calling metrics: edit distance (paper §2.2), read/vote error rates."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def edit_distance(a, b) -> int:
+    """Levenshtein distance — the paper's base-calling error count."""
+    a, b = list(a), list(b)
+    if len(a) < len(b):
+        a, b = b, a
+    prev = list(range(len(b) + 1))
+    for i, ca in enumerate(a, 1):
+        cur = [i]
+        for j, cb in enumerate(b, 1):
+            cur.append(min(prev[j] + 1, cur[j - 1] + 1,
+                           prev[j - 1] + (ca != cb)))
+        prev = cur
+    return prev[-1]
+
+
+def error_rate(pred, pred_len, truth, truth_len) -> float:
+    """Mean edit distance / truth length over a batch (numpy arrays)."""
+    total_err = 0
+    total_len = 0
+    for p, pl, t, tl in zip(pred, pred_len, truth, truth_len):
+        total_err += edit_distance(p[: int(pl)], t[: int(tl)])
+        total_len += int(tl)
+    return total_err / max(total_len, 1)
+
+
+def accuracy(pred, pred_len, truth, truth_len) -> float:
+    return 1.0 - error_rate(pred, pred_len, truth, truth_len)

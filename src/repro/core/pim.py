@@ -1,0 +1,215 @@
+"""First-order analytical model of the ISAAC/Helix PIM hardware (§4.4-§6).
+
+The paper's architecture results (Fig 24-26) come from a cycle-accurate
+NVM-PIM simulator + NVSim + Cadence runs that need RTL/process kits we do
+not have offline (DESIGN.md §8).  This module reproduces them as an
+explicit, testable first-order model:
+
+* POWER/AREA: component accounting straight from Table 2 (per-IMA crossbar
+  arrays, DACs, IR/OR, S+A; CMOS 8-bit 1.28 GSps ADCs vs Helix's 32x32
+  SOT-MRAM ADC arrays; 168 tiles x 12 IMAs; +1024 256x256 comparator
+  arrays for Helix).
+* THROUGHPUT: per-base-caller stage times
+      T(scheme) = t_dnn(bits) + t_ctc + t_vote [+ t_xfer]
+  with the DNN term from bit-serial crossbar arithmetic
+  (ceil(w_bits/2) column slices x a_bits 1-bit-DAC cycles @10 MHz) and the
+  CTC/vote/transfer stage constants CALIBRATED once against the paper's own
+  measurements: Fig 9's 16.7 %/37 % CTC/vote split, the +6.25 % (16-bit),
+  +11.1 % (SEAT), +67.8 % (CTC), 2.22x (vote) step speedups, and Chiron's
+  7.16x ISAAC-over-GPU DNN ratio.  Note the paper's own steps compose to
+  1.111 x 1.678 x 2.22 = 4.14x for a Guppy-like profile; the 6x headline is
+  the AVERAGE over {Guppy, Scrappie, Chiron} and emerges here from Chiron's
+  DNN-heavy profile — which is exactly what the tests assert.
+
+Times are normalized to (t_ctc + t_vote) on the GPU == 1 for each caller.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+# ---------------------------------------------------------------------------
+# Table 2 component power (mW) / area (mm^2)
+# ---------------------------------------------------------------------------
+
+TILE_SHARED_POWER = 40.9       # eDRAM+bus+router+activation+S&A+maxpool+OR
+TILE_SHARED_AREA = 0.215
+
+IMA_ARRAY_POWER = 2.4          # 8 arrays, 128x128, 2 bits/cell
+IMA_SH_POWER = 0.001
+IMA_SA_POWER = 0.2
+IMA_IR_POWER = 1.24
+IMA_OR_POWER = 0.23
+IMA_DAC_POWER = 4.0            # 8x128 1-bit DACs
+IMA_CMOS_ADC_POWER = 16.0      # 8x 8-bit 1.28 GSps
+IMA_MISC_POWER = (IMA_ARRAY_POWER + IMA_SH_POWER + IMA_SA_POWER +
+                  IMA_IR_POWER + IMA_OR_POWER + IMA_DAC_POWER)
+
+IMA_ARRAY_AREA = 0.0002
+IMA_MISC_AREA = 0.00004 + 0.00024 + 0.0021 + 0.00077 + 0.00017
+IMA_CMOS_ADC_AREA = 0.0096
+
+# Helix SOT-MRAM ADC block per IMA: 8x4 32x32 arrays @640 MHz + vref + enc
+IMA_SOT_ADC_POWER = 0.6 + 0.02 + 0.001
+IMA_SOT_ADC_AREA = 0.00005 + 0.00003 + 0.000002
+
+N_TILES = 168
+N_IMAS = 12
+N_ARRAYS = 8
+ROWS = COLS = 128
+BITS_PER_CELL = 2
+ENGINE_FREQ = 10e6
+
+CMP_POWER_W = 1.3              # 1024 256x256 SOT-MRAM comparator arrays
+CMP_AREA = 0.11
+CMP_READS_PARALLEL = 256
+
+
+def cmos_adc_power(bits: int) -> float:
+    """Flash-ADC style scaling: energy/conversion ~2x per bit."""
+    return IMA_CMOS_ADC_POWER * (2.0 ** (bits - 8))
+
+
+def cmos_adc_area(bits: int) -> float:
+    return IMA_CMOS_ADC_AREA * (0.5 + 0.5 * bits / 8)
+
+
+def chip_power_area(adc: str = "cmos", adc_bits: int = 8,
+                    comparators: bool = False):
+    """Whole-chip (W, mm^2) from Table 2 components."""
+    if adc == "cmos":
+        adc_p, adc_a = cmos_adc_power(adc_bits), cmos_adc_area(adc_bits)
+    else:
+        adc_p, adc_a = IMA_SOT_ADC_POWER, IMA_SOT_ADC_AREA
+    tile_p = TILE_SHARED_POWER + N_IMAS * (IMA_MISC_POWER + adc_p)
+    tile_a = TILE_SHARED_AREA + N_IMAS * (IMA_ARRAY_AREA + IMA_MISC_AREA
+                                          + adc_a)
+    power_w = N_TILES * tile_p / 1000.0
+    area = N_TILES * tile_a
+    if comparators:
+        power_w += CMP_POWER_W
+        area += CMP_AREA
+    return power_w, area
+
+
+# ---------------------------------------------------------------------------
+# calibrated stage-time constants (units: GPU t_ctc + t_vote == 1)
+# ---------------------------------------------------------------------------
+T_CTC_GPU = 16.7 / 53.7        # Fig 9
+T_VOTE_GPU = 37.0 / 53.7
+T_XFER = 0.212                 # GPU<->PIM transfer eliminated by CTC scheme
+# fp32-DNN-on-ISAAC time per caller, relative to its (ctc+vote) GPU time.
+# guppy/scrappie from the +6.25 %/+11.1 % quantization speedups; chiron from
+# its 7.16x ISAAC-over-GPU ratio with a 95 % DNN GPU profile (§6.1).
+ALPHA = {"guppy": 0.10, "scrappie": 0.13, "chiron": 1.79}
+# PIM-side CTC beam-merge and comparator-vote stage times (solved from the
+# +67.8 % and 2.22x step equations at beam width 10)
+T_CTC_PIM = 0.0283
+T_VOTE_PIM = 0.2929
+
+
+def dnn_rel(w_bits: int, a_bits: int) -> float:
+    """Crossbar DNN time relative to the fp32 configuration."""
+    col_slices = math.ceil(w_bits / BITS_PER_CELL)
+    cycles = max(a_bits, 1)
+    return (col_slices * cycles) / (math.ceil(32 / BITS_PER_CELL) * 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeMetrics:
+    name: str
+    time: float
+    power_w: float
+    area_mm2: float
+
+    @property
+    def throughput(self) -> float:
+        return 1.0 / self.time
+
+    def per_watt(self, base: "SchemeMetrics") -> float:
+        return (self.throughput / base.throughput) / (self.power_w /
+                                                      base.power_w)
+
+    def per_mm2(self, base: "SchemeMetrics") -> float:
+        return (self.throughput / base.throughput) / (self.area_mm2 /
+                                                      base.area_mm2)
+
+
+def scheme(name: str, caller: str = "guppy", beam_width: int = 10,
+           adc_bits: int = 8) -> SchemeMetrics:
+    """The §5.3 scheme ladder: ISAAC -> 16-bit -> SEAT -> ADC -> CTC -> Helix.
+
+    ``cmosN`` variants (Fig 25) use an N-bit CMOS ADC with the full Helix
+    pipeline otherwise.
+    """
+    a = ALPHA[caller]
+    bs = beam_width / 10.0
+    ctc_gpu = T_CTC_GPU * bs
+    ctc_pim = T_CTC_PIM * bs
+
+    if name == "ISAAC":
+        t = a + ctc_gpu + T_VOTE_GPU + T_XFER
+        p, ar = chip_power_area("cmos", 8)
+    elif name == "16-bit":
+        t = a * dnn_rel(16, 16) + ctc_gpu + T_VOTE_GPU + T_XFER
+        p, ar = chip_power_area("cmos", 8)
+    elif name == "SEAT":
+        t = a * dnn_rel(5, 5) + ctc_gpu + T_VOTE_GPU + T_XFER
+        p, ar = chip_power_area("cmos", 8)
+    elif name == "ADC":
+        t = a * dnn_rel(5, 5) + ctc_gpu + T_VOTE_GPU + T_XFER
+        p, ar = chip_power_area("sot")
+    elif name == "CTC":
+        t = a * dnn_rel(5, 5) + ctc_pim + T_VOTE_GPU
+        p, ar = chip_power_area("sot")
+    elif name == "Helix":
+        t = a * dnn_rel(5, 5) + ctc_pim + T_VOTE_PIM
+        p, ar = chip_power_area("sot", comparators=True)
+    elif name.startswith("cmos"):
+        bits = int(name[4:])
+        t = a * dnn_rel(min(bits, 5), 5) + ctc_pim + T_VOTE_PIM
+        p, ar = chip_power_area("cmos", bits, comparators=True)
+    else:
+        raise ValueError(name)
+    return SchemeMetrics(name, t, p, ar)
+
+
+SCHEMES = ("ISAAC", "16-bit", "SEAT", "ADC", "CTC", "Helix")
+CALLERS = ("guppy", "scrappie", "chiron")
+
+
+def ladder(beam_width: int = 10) -> Dict[str, Dict[str, float]]:
+    """Per-scheme metrics averaged over the three base-callers (Fig 24)."""
+    out = {}
+    for name in SCHEMES:
+        thr = pw = pm = 0.0
+        p = a = 0.0
+        for caller in CALLERS:
+            base = scheme("ISAAC", caller, beam_width)
+            s = scheme(name, caller, beam_width)
+            thr += s.throughput / base.throughput
+            pw += s.per_watt(base)
+            pm += s.per_mm2(base)
+            p, a = s.power_w, s.area_mm2
+        n = len(CALLERS)
+        out[name] = {"throughput_x": thr / n, "per_watt_x": pw / n,
+                     "per_mm2_x": pm / n, "power_w": p, "area_mm2": a}
+    return out
+
+
+PAPER_CLAIMS = {
+    "helix_throughput_x": 6.0,
+    "helix_per_watt_x": 11.9,
+    "helix_per_mm2_x": 7.5,
+    "16bit_speedup": 1.0625,
+    "seat_speedup": 1.111,
+    "ctc_over_adc": 1.678,
+    "helix_over_ctc": 2.22,
+    "isaac_power_w": 55.4,
+    "isaac_area_mm2": 62.5,
+    "helix_power_w": 25.7,
+    "helix_area_mm2": 43.83,
+    "adc_per_watt_over_seat": 2.27,   # "+127 %"
+    "adc_per_mm2_over_seat": 1.429,   # "+42.9 %"
+}

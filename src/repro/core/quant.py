@@ -1,0 +1,120 @@
+"""Network quantization: fake-quant QAT (STE) + integer packing for serving.
+
+Paper §2.3/§3.1: Helix quantizes inputs, weights and activations of the
+base-caller to b-bit fixed point (FQN-style uniform symmetric quantization).
+On TPU the low-bit path executes as int8-container MXU matmuls
+(``kernels/quant_matmul``); this module owns the *numerics*: scales, rounding,
+straight-through gradients, and the packing used by the serving engine.
+
+Quantization is simulated at arbitrary bit-widths (3..16) by clipping the
+integer grid inside an int8/int16 container — the same trick the paper uses
+in its 2-bit-cell crossbars (a 5-bit weight is bit-sliced over cells; here a
+5-bit weight occupies the [-15, 15] sub-grid of an int8 lane).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantization policy for a model. ``enabled=False`` => pure fp path."""
+    enabled: bool = False
+    bits_w: int = 5           # paper's headline: 5-bit with SEAT == fp32
+    bits_a: int = 5
+    per_channel: bool = True  # per-output-channel weight scales
+    # STE clipping range follows the observed absmax (no learned step size —
+    # matches FQN [18] as used by the paper)
+
+    def with_bits(self, bits: int) -> "QuantConfig":
+        return dataclasses.replace(self, bits_w=bits, bits_a=bits, enabled=True)
+
+
+def qmax(bits: int) -> int:
+    """Largest magnitude on a symmetric b-bit grid: 2^(b-1) - 1."""
+    return (1 << (bits - 1)) - 1
+
+
+def compute_scale(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """absmax / qmax, with keepdims so the scale broadcasts against x."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-8) / qmax(bits)
+
+
+def quantize_int(x: jnp.ndarray, scale: jnp.ndarray, bits: int,
+                 dtype=jnp.int8) -> jnp.ndarray:
+    """Real -> integer grid (container dtype holds the sub-grid)."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -qmax(bits), qmax(bits)).astype(dtype)
+
+
+def fake_quant(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """Quantize-dequantize with a straight-through gradient estimator.
+
+    forward: round(clip(x)) * scale; backward: identity (STE).
+    """
+    scale = compute_scale(jax.lax.stop_gradient(x), bits, axis=axis)
+    q = jnp.clip(jnp.round(x / scale), -qmax(bits), qmax(bits)) * scale
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def fq_weight(w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Fake-quant a weight; per-output-channel scales on the LAST axis."""
+    if not cfg.enabled:
+        return w
+    axis = tuple(range(w.ndim - 1)) if (cfg.per_channel and w.ndim > 1) else None
+    return fake_quant(w, cfg.bits_w, axis=axis)
+
+
+def fq_act(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Fake-quant an activation (per-tensor scale, as in FQN)."""
+    if not cfg.enabled:
+        return x
+    return fake_quant(x, cfg.bits_a)
+
+
+def qdense(x: jnp.ndarray, w: jnp.ndarray, cfg: QuantConfig,
+           b: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Quantization-aware dense layer: fq(x) @ fq(w) + b."""
+    y = fq_act(x, cfg) @ fq_weight(w, cfg)
+    return y if b is None else y + b
+
+
+# ---------------------------------------------------------------------------
+# serving-side packing (real integer execution; consumed by kernels/quant_matmul)
+# ---------------------------------------------------------------------------
+
+def pack_weight(w: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (int8 codes, per-channel fp32 scales (1, ..., Cout))."""
+    axis = tuple(range(w.ndim - 1))
+    scale = compute_scale(w, bits, axis=axis).astype(jnp.float32)
+    return quantize_int(w, scale, bits), scale
+
+
+def pack_act(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (int8 codes, scalar fp32 scale)."""
+    scale = compute_scale(x, bits).astype(jnp.float32)
+    return quantize_int(x, scale, bits), scale
+
+
+def dequant_matmul_reference(xq, x_scale, wq, w_scale):
+    """Oracle for the quantized matmul: int32 accumulate, fp dequant."""
+    acc = xq.astype(jnp.int32) @ wq.astype(jnp.int32)
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def tree_fake_quant(params, cfg: QuantConfig, predicate=None):
+    """Fake-quant every >=2-D leaf of a param tree (weights), leave biases."""
+    if not cfg.enabled:
+        return params
+
+    def f(path, leaf):
+        if leaf.ndim >= 2 and (predicate is None or predicate(path, leaf)):
+            return fq_weight(leaf, cfg)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(f, params)

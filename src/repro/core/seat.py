@@ -1,0 +1,151 @@
+"""SEAT — Systematic Error Aware Training (paper §4.1, Eq. 4).
+
+Quantizing a base-caller inflates *systematic* errors: every read covering a
+signal decodes to the same wrong base, so read voting cannot repair it.  SEAT
+adds a consensus term to the CTC loss:
+
+    loss₁ = Σ  [ −η·ln p(Gᵢ|Rᵢ)  +  ( ln p(Gᵢ|Rᵢ) − ln p(Cᵢ|Rᵢ) )² ]
+
+where Cᵢ is the consensus read voted from the predicted reads of several
+overlapping signal windows (R_{i-1}, R_i, R_{i+1}).  Making p(C|R) track
+p(G|R) pushes the *ensemble* (not just each read) toward the ground truth —
+exactly the error class voting cannot fix.
+
+Everything here is jit-compatible: views are static slices, decoding is the
+fixed-shape greedy/beam decoder from ``core.ctc``, voting is ``core.voting``.
+The consensus is discrete (ints) so no gradient flows through it; side-view
+logits are wrapped in stop_gradient (they only feed the decoder), which is
+also why SEAT's overhead stays in the paper's reported 32–52 % band: the
+extra view forwards have no backward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ctc as ctc_lib
+from repro.core import voting as voting_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class SEATConfig:
+    enabled: bool = True
+    eta: float = 1.0           # weight of the per-read CTC term (paper: (0,1])
+    n_views: int = 3           # R_{i-1}, R_i, R_{i+1}
+    view_stride: int = 16      # signal-sample offset between views (paper's T)
+    beam_width: int = 0        # 0 => greedy decode of view reads (fast path)
+    max_read_len: int = 96     # decode pad length
+    consensus_span: int = 192  # voting grid length
+    n_symbols: int = 4         # DNA alphabet for voting
+
+    @property
+    def margin(self) -> int:
+        """Extra signal samples required on EACH side of the center window."""
+        return (self.n_views // 2) * self.view_stride
+
+
+def make_views(signal: jnp.ndarray, cfg: SEATConfig) -> Tuple[jnp.ndarray, int]:
+    """Slice n_views overlapping windows out of a padded signal chunk.
+
+    signal: (B, T_center + 2*margin, C).  Returns (views (V, B, T_center, C),
+    center_index).  View k starts at k*stride; the center view is the one the
+    ground-truth labels correspond to.
+    """
+    V, s = cfg.n_views, cfg.view_stride
+    t_center = signal.shape[1] - 2 * cfg.margin
+    views = jnp.stack([
+        jax.lax.dynamic_slice_in_dim(signal, k * s, t_center, axis=1)
+        for k in range(V)
+    ])
+    return views, V // 2
+
+
+def _decode_views(log_probs: jnp.ndarray, cfg: SEATConfig):
+    """(V*B, T, A) -> (V*B, max_read_len) reads + (V*B,) lengths."""
+    if cfg.beam_width and cfg.beam_width > 1:
+        pref, lens, _ = ctc_lib.ctc_beam_search_batch(
+            log_probs, beam_width=cfg.beam_width, max_len=cfg.max_read_len)
+        return pref[:, 0], lens[:, 0]
+    reads, lens = jax.vmap(ctc_lib.ctc_greedy_decode)(log_probs)
+    # clip/pad to max_read_len
+    L = reads.shape[1]
+    if L >= cfg.max_read_len:
+        reads = reads[:, : cfg.max_read_len]
+        lens = jnp.minimum(lens, cfg.max_read_len)
+    else:
+        reads = jnp.pad(reads, ((0, 0), (0, cfg.max_read_len - L)),
+                        constant_values=-1)
+    return reads, lens
+
+
+def consensus_reads(view_log_probs: jnp.ndarray, center: int, cfg: SEATConfig
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Vote a consensus read aligned to the center view.
+
+    view_log_probs: (V, B, T, A).  Returns (C (B, max_read_len) padded -1,
+    C_len (B,)) — the consensus restricted to the span the center read covers,
+    so that p(C|R_center) is well-defined.
+    """
+    V, B, T, A = view_log_probs.shape
+    reads, lens = _decode_views(view_log_probs.reshape(V * B, T, A), cfg)
+    reads = reads.reshape(V, B, -1).transpose(1, 0, 2)   # (B, V, L)
+    lens = lens.reshape(V, B).T                          # (B, V)
+
+    def one(reads_b, lens_b):
+        offs = voting_lib.align_offsets(reads_b, lens_b)
+        grid, covered = voting_lib.consensus_grid(
+            reads_b, lens_b, offs, n_symbols=cfg.n_symbols,
+            span=cfg.consensus_span)
+        # slice the window belonging to the center read
+        start = jnp.clip(offs[center], 0, cfg.consensus_span - 1)
+        clen = jnp.minimum(lens_b[center], cfg.max_read_len)
+        win = jax.lax.dynamic_slice_in_dim(grid, start, cfg.max_read_len)
+        win = jnp.where(jnp.arange(cfg.max_read_len) < clen, win, -1)
+        return win, clen
+
+    return jax.vmap(one)(reads, lens)
+
+
+def seat_loss(
+    logits_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    signal: jnp.ndarray,
+    labels: jnp.ndarray,
+    label_lengths: jnp.ndarray,
+    cfg: SEATConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Eq. 4. ``logits_fn``: (B, T_win, C) -> (B, T_out, A) LOG-probs.
+
+    ``signal`` must carry ``cfg.margin`` extra samples on each side of the
+    window the ``labels`` describe.  Returns (scalar loss, metrics dict).
+    """
+    views, center = make_views(signal, cfg)                # (V, B, Tw, C)
+    lp_center = logits_fn(views[center])                   # grads flow here
+
+    if not cfg.enabled:
+        loss_g = ctc_lib.ctc_loss_batch(lp_center, labels, label_lengths)
+        loss = loss_g.mean()
+        return loss, {"loss": loss, "ctc_g": loss,
+                      "consensus_gap": jnp.zeros(())}
+
+    # side views feed only the (discrete) decoder — no backward needed
+    side_lps = [jax.lax.stop_gradient(logits_fn(views[k]))
+                for k in range(cfg.n_views) if k != center]
+    all_lps = side_lps[: center] + [jax.lax.stop_gradient(lp_center)] \
+        + side_lps[center:]
+    view_lps = jnp.stack(all_lps)                          # (V, B, T, A)
+
+    C, C_len = consensus_reads(view_lps, center, cfg)      # ints: no grad path
+
+    loss_g = ctc_lib.ctc_loss_batch(lp_center, labels, label_lengths)  # −ln p(G|R)
+    loss_c = ctc_lib.ctc_loss_batch(lp_center, C, C_len)               # −ln p(C|R)
+    gap = loss_g - loss_c                                   # ln p(C|R) − ln p(G|R)
+    loss = (cfg.eta * loss_g + gap ** 2).mean()
+    return loss, {
+        "loss": loss,
+        "ctc_g": loss_g.mean(),
+        "ctc_c": loss_c.mean(),
+        "consensus_gap": jnp.abs(gap).mean(),
+    }

@@ -1,0 +1,127 @@
+"""Synthetic nanopore sequencing channel (data gate — see DESIGN.md §8).
+
+Real R9.4 fast5 training data is not available offline, so we simulate the
+physics the paper describes (§2.2, §5.2):
+
+  DNA sequence --(k-mer pore model)--> current levels
+              --(stochastic dwell)---> non-uniform sample counts per base
+              --(additive noise)-----> raw signal
+              --(chunk normalize)----> (signal - mean) / std     [paper §5.2]
+
+The pore model is a fixed pseudo-random 6-mer -> current table (the shape of
+real pore tables: each 6-mer has a characteristic pA level).  Dwell times are
+geometric-ish (1 + clipped Poisson), reproducing the "no alignment between
+signal and read" property that makes CTC necessary.
+
+Everything is jit/vmap-compatible with fixed shapes so the loader can run on
+device and per-example keys make data fully deterministic+resumable (the
+fault-tolerance story: a restarted trainer regenerates identical batches from
+the step index).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+N_BASES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SignalConfig:
+    window: int = 300          # center window samples (paper: 300 x 1)
+    margin: int = 0            # extra samples each side (SEAT views)
+    kmer: int = 6              # pore model context
+    mean_dwell: float = 8.0    # samples per base
+    noise_std: float = 0.25    # channel noise (relative to level std)
+    max_label_len: int = 96    # label pad length
+    genome_chunk: int = 0      # bases simulated per chunk (0 => auto)
+
+    @property
+    def total_samples(self) -> int:
+        return self.window + 2 * self.margin
+
+    @property
+    def chunk_bases(self) -> int:
+        if self.genome_chunk:
+            return self.genome_chunk
+        # enough bases that Σ dwell >= total samples with huge probability
+        return int(self.total_samples / self.mean_dwell * 2.5) + self.kmer + 4
+
+
+def pore_table(kmer: int = 6, seed: int = 7) -> jnp.ndarray:
+    """Fixed pseudo-random pore model: 4^k current levels, standardized."""
+    n = N_BASES ** kmer
+    tbl = jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+    return (tbl - tbl.mean()) / tbl.std()
+
+
+_PORE_CACHE: dict = {}
+
+
+def _pore(kmer: int) -> jnp.ndarray:
+    if kmer not in _PORE_CACHE:
+        _PORE_CACHE[kmer] = pore_table(kmer)
+    return _PORE_CACHE[kmer]
+
+
+def sample_example(key, cfg: SignalConfig):
+    """One training example.
+
+    Returns dict:
+      signal: (total_samples, 1) normalized current
+      labels: (max_label_len,) base ids for the CENTER window, padded 0
+      label_length: () int32
+    """
+    k_seq, k_dwell, k_noise = jax.random.split(key, 3)
+    nb = cfg.chunk_bases
+    seq = jax.random.randint(k_seq, (nb,), 0, N_BASES)
+
+    # k-mer ids via base-4 rolling window
+    powers = N_BASES ** jnp.arange(cfg.kmer)
+    padded = jnp.concatenate([jnp.zeros((cfg.kmer - 1,), seq.dtype), seq])
+    windows = jnp.stack([padded[i: i + nb] for i in range(cfg.kmer)], axis=0)
+    kmer_ids = jnp.tensordot(powers, windows, axes=1)          # (nb,)
+    levels = _pore(cfg.kmer)[kmer_ids]                         # (nb,)
+
+    # stochastic dwell: 1 + Poisson(mean-1), clipped
+    lam = cfg.mean_dwell - 1.0
+    dwell = 1 + jnp.clip(jax.random.poisson(k_dwell, lam, (nb,)), 0,
+                         int(4 * cfg.mean_dwell)).astype(jnp.int32)
+    ends = jnp.cumsum(dwell)                                   # (nb,)
+    # base index for each output sample
+    t = jnp.arange(cfg.total_samples)
+    base_idx = jnp.searchsorted(ends, t, side="right")
+    base_idx = jnp.minimum(base_idx, nb - 1)
+
+    raw = levels[base_idx]
+    raw = raw + cfg.noise_std * jax.random.normal(
+        k_noise, raw.shape, jnp.float32)
+    signal = (raw - raw.mean()) / (raw.std() + 1e-6)           # paper §5.2
+
+    # labels: distinct consecutive bases covered by the CENTER window
+    ct = jnp.arange(cfg.margin, cfg.margin + cfg.window)
+    cidx = jnp.minimum(jnp.searchsorted(ends, ct, side="right"), nb - 1)
+    first = jnp.concatenate([jnp.ones((1,), bool), cidx[1:] != cidx[:-1]])
+    n_lab = first.sum().astype(jnp.int32)
+    wpos = jnp.cumsum(first.astype(jnp.int32)) - 1
+    labels = jnp.zeros((cfg.max_label_len,), jnp.int32)
+    labels = labels.at[jnp.where(first, jnp.minimum(wpos, cfg.max_label_len - 1),
+                                 cfg.max_label_len)].set(
+        seq[cidx].astype(jnp.int32), mode="drop")
+    n_lab = jnp.minimum(n_lab, cfg.max_label_len)
+
+    return {"signal": signal[:, None], "labels": labels,
+            "label_length": n_lab}
+
+
+def sample_batch(key, batch: int, cfg: SignalConfig):
+    keys = jax.random.split(key, batch)
+    return jax.vmap(lambda k: sample_example(k, cfg))(keys)
+
+
+def batch_for_step(step: int, batch: int, cfg: SignalConfig, seed: int = 0):
+    """Deterministic batch for a global step (restart-safe data order)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return sample_batch(key, batch, cfg)

@@ -1,0 +1,69 @@
+"""Sharded host data loader with background prefetch.
+
+Production input pipeline: a generator thread produces per-step batches
+(deterministic in the global step — restart replay, see data/genome.py),
+a bounded queue overlaps host data generation with device compute, and
+``device_put`` places each batch with the trainer's NamedSharding so the
+jitted step never blocks on host->device transfer of an unsharded array.
+
+On a pod each process feeds its addressable shard
+(``jax.make_array_from_process_local_data`` path); in this single-process
+container ``device_put`` with a NamedSharding covers both cases.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+
+
+class PrefetchLoader:
+    def __init__(self, batch_fn: Callable[[int], dict], start_step: int = 0,
+                 prefetch: int = 2, sharding=None):
+        """batch_fn(step) -> pytree of host arrays."""
+        self.batch_fn = batch_fn
+        self.sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self.sharding is None:
+            return batch
+        if isinstance(self.sharding, dict):
+            return {k: jax.device_put(v, self.sharding.get(k))
+                    for k, v in batch.items()}
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, self.sharding), batch)
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                batch = self._place(self.batch_fn(step))
+            except Exception as e:  # surface generator failures to consumer
+                self._q.put(e)
+                return
+            self._q.put((step, batch))
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

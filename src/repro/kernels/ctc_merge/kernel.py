@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: CTC beam-merge (paper §4.3, Fig. 18).
+
+Helix writes the beam's per-base probabilities onto the diagonal of an NVM
+dot-product array and closes bit-line transistors to MERGE the probabilities
+of candidate sequences that collapse to the same read
+(p(A) = p(A₀A₁)+p(A₀-₁)+p(-₀A₁)+p(-₀-₁)).
+
+The digital equivalent of "closing transistors between bit-lines" is a
+masked reduction over an equality matrix: given candidate scores s (log
+domain) and eq[i,j] = 1 iff candidates i and j collapse to the same prefix,
+
+    merged[i] = log Σ_j eq[i,j] · exp(s[j])
+
+computed per row with max-subtraction for stability.  The (C×C) masked
+sum-product is the same crossbar-shaped operation, on the VPU.
+
+Tiling: grid (B, C/bi); each step holds an (bi, C) eq tile and the full
+(1, C) score row in VMEM — C is the candidate count (beam·alphabet, ≤ a few
+hundred), so a full row fits comfortably.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1.0e9
+
+
+def _merge_kernel(eq_ref, s_ref, o_ref):
+    eq = eq_ref[0]                       # (bi, C) int8
+    s = s_ref[0]                         # (1, C) f32
+    masked = jnp.where(eq > 0, s, NEG)   # broadcast row scores
+    m = jnp.max(masked, axis=1, keepdims=True)
+    ssum = jnp.sum(jnp.exp(masked - m), axis=1, keepdims=True)
+    o_ref[0, :] = (m + jnp.log(ssum))[:, 0]
+
+
+def ctc_merge_pallas(eq: jnp.ndarray, scores: jnp.ndarray,
+                     *, bi: int = 128, interpret: bool = False
+                     ) -> jnp.ndarray:
+    """eq (B, C, C) int8, scores (B, C) f32 -> merged (B, C) f32."""
+    B, C, C2 = eq.shape
+    assert C == C2 and C % bi == 0
+
+    grid = (B, C // bi)
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bi, C), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, C), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bi), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(eq, scores)

@@ -1,0 +1,44 @@
+"""jit'd wrapper for the CTC beam-merge kernel (padding + auto-interpret)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ctc_merge.kernel import ctc_merge_pallas
+from repro.kernels.ctc_merge.ref import ctc_merge_ref
+
+NEG = -1.0e9
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "interpret"))
+def masked_logsumexp(eq: jnp.ndarray, scores: jnp.ndarray, *, bi: int = 128,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Batched masked logsumexp: (B, C, C) mask x (B, C) scores -> (B, C).
+
+    Rows must be self-connected (eq[b,i,i]=1) so no row is empty.
+    Pads C to the tile size with inert (self-connected, NEG-score) lanes.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    B, C, _ = eq.shape
+    pad = (-C) % bi
+    if pad:
+        Cp = C + pad
+        eye = jnp.eye(Cp, dtype=eq.dtype)
+        eq_p = jnp.zeros((B, Cp, Cp), eq.dtype).at[:, :C, :C].set(eq)
+        eq_p = jnp.maximum(eq_p, eye[None])
+        s_p = jnp.full((B, Cp), NEG, scores.dtype).at[:, :C].set(scores)
+    else:
+        eq_p, s_p = eq, scores
+    out = ctc_merge_pallas(eq_p.astype(jnp.int8), s_p.astype(jnp.float32),
+                           bi=bi, interpret=interpret)
+    return out[:, :C]
+
+
+__all__ = ["masked_logsumexp", "ctc_merge_ref"]

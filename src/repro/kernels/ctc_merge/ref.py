@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the CTC beam-merge kernel."""
+import jax.numpy as jnp
+
+NEG = -1.0e9
+
+
+def ctc_merge_ref(eq: jnp.ndarray, scores: jnp.ndarray) -> jnp.ndarray:
+    """eq (B, C, C), scores (B, C) -> (B, C) masked logsumexp per row."""
+    masked = jnp.where(eq > 0, scores[:, None, :], NEG)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    return (m + jnp.log(jnp.sum(jnp.exp(masked - m), axis=-1,
+                                keepdims=True)))[..., 0]

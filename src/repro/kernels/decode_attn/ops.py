@@ -1,0 +1,40 @@
+"""jit'd wrapper for the decode-attention kernel (padding, auto-interpret)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.kernel import decode_attn_pallas
+from repro.kernels.decode_attn.ref import decode_attn_ref
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "bl", "interpret"))
+def decode_attn(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                n_valid: jnp.ndarray, *, groups: int, bl: int = 256,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Single-token GQA attention over a ring/full cache.
+
+    q (B, H, D); caches (B, L, Kv, D) with H = Kv*groups; n_valid (B,).
+    Pads L to the block size (padded slots are masked by n_valid).
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    L = k_cache.shape[1]
+    bl = min(bl, max(L, 8))
+    pad = (-L) % bl
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+    return decode_attn_pallas(q, k_cache, v_cache,
+                              n_valid.reshape(-1, 1).astype(jnp.int32),
+                              groups=groups, bl=bl, interpret=interpret)
+
+
+__all__ = ["decode_attn", "decode_attn_ref"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: models/layers.decode_attention reshaped to kernel I/O."""
+import jax.numpy as jnp
+
+from repro.models.layers import decode_attention
+
+
+def decode_attn_ref(q, k_cache, v_cache, n_valid, groups):
+    """q (B, H, D); caches (B, L, Kv, D); n_valid (B, 1) -> (B, H, D)."""
+    B, H, D = q.shape
+    L = k_cache.shape[1]
+    valid = jnp.arange(L)[None, :] < n_valid
+    out = decode_attention(q[:, None], k_cache, v_cache, valid)
+    return out[:, 0]

@@ -1,0 +1,34 @@
+"""jit'd wrapper for the fused GRU cell (padding + auto-interpret)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gru_cell.kernel import gru_cell_pallas
+from repro.kernels.gru_cell.ref import gru_cell_ref
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+def gru_cell(x_proj: jnp.ndarray, h: jnp.ndarray, u: jnp.ndarray,
+             b: jnp.ndarray, *, bb: int = 128,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """Fused GRU step; pads batch to the tile size."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    B = h.shape[0]
+    pad = (-B) % bb
+    if pad:
+        x_proj = jnp.pad(x_proj, ((0, pad), (0, 0)))
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+    out = gru_cell_pallas(x_proj, h, u, b.reshape(1, -1), bb=bb,
+                          interpret=interpret)
+    return out[:B]
+
+
+__all__ = ["gru_cell", "gru_cell_ref"]

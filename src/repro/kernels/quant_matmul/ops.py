@@ -1,0 +1,53 @@
+"""jit'd public wrapper: padding, auto-interpret on CPU, fp fast-path."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as quant_lib
+from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray, x_scale: jnp.ndarray,
+                 w_scale: jnp.ndarray, *, bm: int = 128, bn: int = 128,
+                 bk: int = 128, interpret: bool | None = None) -> jnp.ndarray:
+    """Quantized matmul over int8 codes; pads ragged shapes to MXU tiles."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    M, K = xq.shape
+    N = wq.shape[1]
+    xq_p = _pad_to(_pad_to(xq, bm, 0), bk, 1)
+    wq_p = _pad_to(_pad_to(wq, bk, 0), bn, 1)
+    sw_p = _pad_to(w_scale.reshape(1, -1), bn, 1)
+    out = quant_matmul_pallas(xq_p, wq_p, x_scale.reshape(1, 1), sw_p,
+                              bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:M, :N]
+
+
+def qmm_from_float(x: jnp.ndarray, w: jnp.ndarray, bits: int = 5,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """Quantize fp inputs on the fly and run the integer kernel."""
+    xq, sx = quant_lib.pack_act(x, bits)
+    wq, sw = quant_lib.pack_weight(w, bits)
+    return quant_matmul(xq, wq, sx.reshape(1, 1), sw.reshape(1, -1),
+                        interpret=interpret)
+
+
+__all__ = ["quant_matmul", "qmm_from_float", "quant_matmul_ref"]

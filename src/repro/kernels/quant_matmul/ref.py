@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the quantized matmul kernel."""
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(xq, wq, x_scale, w_scale):
+    """int32-accumulated integer matmul with fp32 dequant.
+
+    xq: (M, K) int8; wq: (K, N) int8; x_scale (1,1); w_scale (1, N).
+    """
+    acc = jnp.dot(xq.astype(jnp.int32), wq.astype(jnp.int32))
+    return acc.astype(jnp.float32) * x_scale * w_scale

@@ -1,0 +1,69 @@
+"""jit'd wrapper: substring extraction, bit encoding, padding, match finding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vote_cmp.kernel import vote_cmp_pallas
+from repro.kernels.vote_cmp.ref import substring_bits, vote_cmp_ref
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x, mult, axis, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "bm", "bn", "bk",
+                                             "interpret"))
+def mismatch_bits(r1: jnp.ndarray, r2: jnp.ndarray, K: int,
+                  *, bm: int = 128, bn: int = 128, bk: int = 128,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """All-substring comparator: (L1-K+1, L2-K+1) XOR-bit counts.
+
+    Zero entries mark exact K-window matches (paper: no SL current).
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    a = substring_bits(r1, K)                  # (n1, K*3)
+    b = substring_bits(r2, K)                  # (n2, K*3)
+    n1, D = a.shape
+    n2 = b.shape[0]
+    ra = a.sum(-1, dtype=jnp.int32)[:, None]
+    rb = b.sum(-1, dtype=jnp.int32)[None, :]
+    a_p = _pad_axis(_pad_axis(a, bm, 0), bk, 1)
+    bT_p = _pad_axis(_pad_axis(b.T, bk, 0), bn, 1)
+    ra_p = _pad_axis(ra, bm, 0)
+    rb_p = _pad_axis(rb, bn, 1)
+    out = vote_cmp_pallas(a_p, bT_p, ra_p, rb_p, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret)
+    return out[:n1, :n2]
+
+
+def find_matches(r1: jnp.ndarray, r2: jnp.ndarray, K: int,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Boolean (n1, n2): exact K-length window matches between two reads."""
+    return mismatch_bits(r1, r2, K, interpret=interpret) == 0
+
+
+def best_match(r1: jnp.ndarray, r2: jnp.ndarray, K: int,
+               interpret: bool | None = None):
+    """(i, j, found): positions of the first exact K-window match."""
+    m = mismatch_bits(r1, r2, K, interpret=interpret)
+    flat = jnp.argmin(m.reshape(-1))
+    found = m.reshape(-1)[flat] == 0
+    n2 = m.shape[1]
+    return flat // n2, flat % n2, found
+
+
+__all__ = ["mismatch_bits", "find_matches", "best_match", "vote_cmp_ref",
+           "substring_bits"]

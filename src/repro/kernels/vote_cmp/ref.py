@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the binary comparator kernel."""
+import jax.numpy as jnp
+
+from repro.core.voting import encode_3bit
+
+
+def substring_bits(read: jnp.ndarray, K: int) -> jnp.ndarray:
+    """(L,) symbols -> (L-K+1, K*3) int8 bit-planes of all K-substrings."""
+    L = read.shape[0]
+    n = L - K + 1
+    idx = jnp.arange(n)[:, None] + jnp.arange(K)[None, :]
+    bits = encode_3bit(read[idx])                  # (n, K, 3)
+    return bits.reshape(n, K * 3).astype(jnp.int8)
+
+
+def vote_cmp_ref(a_bits: jnp.ndarray, b_bits: jnp.ndarray) -> jnp.ndarray:
+    """Mismatch-bit counts: direct XOR-popcount (no matmul trick)."""
+    x = a_bits[:, None, :].astype(jnp.int32) ^ b_bits[None, :, :].astype(jnp.int32)
+    return x.sum(-1)
+
+
+def mismatch_matrix_ref(r1: jnp.ndarray, r2: jnp.ndarray, K: int) -> jnp.ndarray:
+    """Symbol-level window compare: M[i,j] = #positions where windows differ."""
+    n1 = r1.shape[0] - K + 1
+    n2 = r2.shape[0] - K + 1
+    i = jnp.arange(n1)[:, None, None] + jnp.arange(K)[None, None, :]
+    j = jnp.arange(n2)[None, :, None] + jnp.arange(K)[None, None, :]
+    return (r1[i] != r2[j]).sum(-1)

@@ -1,0 +1,354 @@
+"""Post-SPMD HLO analysis: collective inventory + roofline terms.
+
+``collective_stats``: parse ``compiled.as_text()`` and sum, per collective
+kind, the result-buffer bytes and the estimated per-device WIRE bytes:
+
+    all-gather          out * (g-1)/g        (ring receive volume)
+    all-reduce          2 * size * (g-1)/g   (reduce-scatter + all-gather)
+    reduce-scatter      out * (g-1)           (receives (g-1)/g of input)
+    all-to-all          size * (g-1)/g
+    collective-permute  size                  (point-to-point)
+
+g is parsed from replica_groups (both the explicit {{...}} and the iota
+[n,g]<= forms).  cost_analysis()['flops'/'bytes accessed'] are already
+per-device for an SPMD-partitioned module (validated empirically), so the
+three roofline terms are directly comparable.
+
+v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>[^=]*?)\s*"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_EXPL = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_EXPL.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> Dict:
+    """Per-kind {count, result_bytes, wire_bytes} + totals (per device)."""
+    out = {k: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0}
+           for k in ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute")}
+    for line in hlo_text.splitlines():
+        if "-done" in line and "fusion" not in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        rb = _shape_bytes(m.group("shape"))
+        if rb == 0:
+            continue
+        g = max(_group_size(line, n_devices), 1)
+        frac = (g - 1) / g
+        wire = {"all-gather": rb * frac,
+                "all-reduce": 2.0 * rb * frac,
+                "reduce-scatter": rb * (g - 1),
+                "all-to-all": rb * frac,
+                "collective-permute": float(rb)}[kind]
+        out[kind]["count"] += 1
+        out[kind]["result_bytes"] += rb
+        out[kind]["wire_bytes"] += wire
+    out["total_wire_bytes"] = sum(
+        v["wire_bytes"] for k, v in out.items() if isinstance(v, dict))
+    out["total_count"] = sum(
+        v["count"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# loop-aware HLO cost reconstruction
+# ---------------------------------------------------------------------------
+# XLA's cost_analysis() counts a while-loop body ONCE regardless of trip
+# count (verified empirically — see EXPERIMENTS.md §Roofline methodology),
+# so scan-stacked models report per-iteration costs. This section rebuilds
+# flops / bytes-accessed / collective-wire-bytes from the HLO text with
+# while bodies multiplied by their parsed trip counts.
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s*([\w\-]+)\((.*)$")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_CALL_SINGLE = re.compile(
+    r"(?:body|to_apply|calls|condition)=%?([\w.\-]+)")
+_CALL_LIST = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _callees(rest: str):
+    out = [m.group(1) for m in _CALL_SINGLE.finditer(rest)]
+    for m in _CALL_LIST.finditer(rest):
+        out.extend(c.strip().lstrip("%") for c in m.group(1).split(","))
+    return out
+_DOT_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+class _Comp:
+    def __init__(self, name):
+        self.name = name
+        self.ops = []          # (result_name, shape_text, opcode, rest)
+        self.shapes = {}       # value name -> byte size
+
+
+def _parse_computations(hlo_text: str):
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HDR.match(stripped.replace("ENTRY ", ""))
+            name = stripped.split()[1 if stripped.startswith("ENTRY") else 0]
+            name = name.lstrip("%").split("(")[0].split()[0]
+            cur = comps.setdefault(name, _Comp(name))
+            continue
+        if stripped == "}" or cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            res, shape_text, opcode, rest = m.groups()
+            cur.ops.append((res, shape_text, opcode, rest))
+            cur.shapes[res] = _shape_bytes(shape_text)
+    return comps
+
+
+def _operand_names(rest: str):
+    """Names inside the op's FIRST parenthesized group (already open)."""
+    depth = 1
+    out = []
+    token = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        token += ch
+    return re.findall(r"%([\w.\-]+)", token)
+
+
+def _trip_count(comp: _Comp, comps=None) -> int:
+    """Trip count from a while CONDITION computation: the s32[] constant
+    operand of its bound compare (direction=LT/LE), not just any constant
+    (conditions can also hold clamp bounds like the vocab size)."""
+    consts = {}
+    for res, shape_text, opcode, rest in comp.ops:
+        if opcode == "constant" and re.search(r"s32\[\]", shape_text):
+            c = re.match(r"(\d+)\)", rest)
+            if c:
+                consts[res] = int(c.group(1))
+    for res, shape_text, opcode, rest in comp.ops:
+        ops = _operand_names(rest)
+        if opcode == "compare":
+            m = re.search(r"direction=(LT|LE|GT|GE)", rest)
+            for o in ops:
+                if o in consts:
+                    t = consts[o]
+                    return t + 1 if (m and m.group(1) == "LE") else t
+        if opcode == "fusion" and comps is not None:
+            for c in _callees(rest):
+                sub = comps.get(c)
+                if sub is not None:
+                    t = _trip_count(sub, comps)
+                    if t > 1:
+                        return t
+    # fallback: single constant in the condition
+    if len(consts) == 1:
+        return next(iter(consts.values()))
+    return 1
+
+
+def loop_aware_cost(hlo_text: str, n_devices: int):
+    """(flops, bytes_accessed, collective_wire_bytes) with while bodies
+    multiplied by trip counts. Per-device (post-SPMD module)."""
+    comps = _parse_computations(hlo_text)
+    # element sizes (not bytes) per value for dot contraction math
+    elem_tbl = {}
+    dt_bytes = _DTYPE_BYTES
+
+    def shape_dims(shape_text):
+        out = []
+        for dt, dims in _SHAPE_RE.findall(shape_text):
+            d = [int(x) for x in dims.split(",") if x]
+            out.append((dt, d))
+        return out
+
+    # pre-index value -> (dtype, dims) for each computation
+    comp_vals = {}
+    for name, comp in comps.items():
+        tbl = {}
+        for res, shape_text, opcode, rest in comp.ops:
+            ds = shape_dims(shape_text)
+            if ds:
+                tbl[res] = ds[0]
+        comp_vals[name] = tbl
+
+    memo = {}
+    # ops that are views/metadata: no HBM traffic of their own
+    _FREE = {"parameter", "tuple", "get-tuple-element", "bitcast",
+             "constant", "after-all", "partition-id", "replica-id",
+             "get-dimension-size", "opt-barrier", "optimization-barrier"}
+
+    def cost(name):
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, 0.0)
+        memo[name] = (0.0, 0.0, 0.0)   # cycle guard
+        fl = by = wi = 0.0
+        tbl = comp_vals[name]
+        for res, shape_text, opcode, rest in comp.ops:
+            rbytes = comp.shapes.get(res, 0)
+            ops = _operand_names(rest)
+            if opcode == "fusion":
+                # fused dynamic-slice/gather reads only a slice of a big
+                # operand (e.g. the layer-stacked weights inside a scan
+                # body); cap per-operand traffic near the result size, the
+                # upper bound on what a kLoop/kOutput fusion consumes
+                obytes = sum(min(comp.shapes.get(o, 0),
+                                 2 * rbytes + (1 << 20)) for o in ops)
+            else:
+                obytes = sum(comp.shapes.get(o, 0) for o in ops)
+            callees = _callees(rest)
+            if opcode in _FREE:
+                continue
+            if opcode == "dynamic-slice":
+                by += 2.0 * rbytes          # read slice + write result
+                continue
+            if opcode == "dynamic-update-slice":
+                upd = (comp.shapes.get(ops[1], 0) if len(ops) > 1 else 0)
+                by += 2.0 * upd             # in-place slice write
+                continue
+            if opcode == "while":
+                body_cost = [0.0, 0.0, 0.0]
+                for c in callees:
+                    sub = cost(c)
+                    body_cost = [a + b for a, b in zip(body_cost, sub)]
+                # trip count ONLY from the condition computation — the body
+                # holds unrelated s32 constants (sequence lengths etc.)
+                trips = 1
+                mcond = re.search(r"condition=%?([\w.\-]+)", rest)
+                if mcond:
+                    trips = _trip_count(
+                        comps.get(mcond.group(1), _Comp("")), comps)
+                fl += body_cost[0] * trips
+                by += body_cost[1] * trips
+                wi += body_cost[2] * trips
+                continue
+            if opcode in ("call", "conditional", "custom-call", "fusion",
+                          "map", "reduce", "reduce-window", "sort",
+                          "scatter", "select-and-scatter", "async-start"):
+                for c in callees:
+                    sub = cost(c)
+                    # fusion internals: count FLOPs; bytes = boundary only
+                    fl += sub[0]
+                    wi += sub[2]
+            if opcode == "dot":
+                dtype, out_dims = tbl.get(res, ("f32", []))
+                out_elems = 1
+                for d in out_dims:
+                    out_elems *= d
+                k = 1
+                m = _DOT_CDIMS.search(rest)
+                if m and ops and ops[0] in tbl:
+                    _, lhs_dims = tbl[ops[0]]
+                    for di in m.group(1).split(","):
+                        if di and int(di) < len(lhs_dims):
+                            k *= lhs_dims[int(di)]
+                fl += 2.0 * out_elems * k
+            cw = _COLL_RE.search(" = " + shape_text + " " + opcode + "(")
+            if cw:
+                g = max(_group_size(rest, n_devices), 1)
+                frac = (g - 1) / g
+                wire = {"all-gather": rbytes * frac,
+                        "all-reduce": 2.0 * rbytes * frac,
+                        "reduce-scatter": rbytes * (g - 1),
+                        "all-to-all": rbytes * frac,
+                        "collective-permute": float(rbytes)}[cw.group("kind")]
+                wi += wire
+            by += rbytes + obytes
+        memo[name] = (fl, by, wi)
+        return memo[name]
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            entry = line.split()[1].lstrip("%").split("(")[0]
+            break
+    if entry is None:
+        return (0.0, 0.0, 0.0)
+    return cost(entry)
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float, ici_links: int = 4) -> Dict:
+    """The three per-device roofline terms, in seconds."""
+    t_compute = flops_per_dev / PEAK_FLOPS
+    t_memory = bytes_per_dev / HBM_BW
+    t_collective = wire_bytes_per_dev / (ICI_BW * ici_links)
+    terms = {"t_compute_s": t_compute, "t_memory_s": t_memory,
+             "t_collective_s": t_collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = {"t_compute_s": "compute", "t_memory_s": "memory",
+                         "t_collective_s": "collective"}[dom]
+    terms["t_bound_s"] = max(t_compute, t_memory, t_collective)
+    return terms
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per step, per device.
+
+    decode shapes: D = batch tokens (one step); train: 6ND fwd+bwd;
+    prefill: 2ND (fwd only).
+    """
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        d_tokens = shape.batch * shape.seq
+        f = 6.0 * n_active * d_tokens
+    elif shape.kind == "prefill":
+        d_tokens = shape.batch * shape.seq
+        f = 2.0 * n_active * d_tokens
+    else:
+        f = 2.0 * n_active * shape.batch
+    return f / n_devices

@@ -1,0 +1,336 @@
+"""(arch x shape x mesh) cell definitions for the dry-run.
+
+For every assigned architecture and its shape set this module builds:
+  * abstract inputs (ShapeDtypeStruct + NamedSharding) — no allocation;
+  * the step function to lower:   train_4k   -> train_step (fwd+bwd+AdamW)
+                                  prefill_32k -> prefill (logits + cache)
+                                  decode_32k / long_500k -> serve_step
+                                    (one new token against a seq_len cache).
+
+Applicability rules (DESIGN.md §5): long_500k only for sub-quadratic archs
+(SSM / hybrid / SWA); encoder-only archs would skip decode (none assigned);
+base-callers use their own driver and are exercised by examples/benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as cfg_reg
+from repro.dist import sharding as shd
+from repro.models import decode as decode_lib
+from repro.models import lm as lm_lib
+from repro.train.optimizer import AdamW
+
+# ---------------------------------------------------------------------------
+# shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+SHAPE_IDS = tuple(SHAPES)
+
+# encoder memory length for enc-dec decode shapes (decoder cache = seq_len,
+# cross-attention memory is a fixed-length encoded utterance)
+ENC_LEN_DECODE = 4_096
+
+
+def applicable(arch_id: str, shape_id: str) -> Tuple[bool, str]:
+    cfg = cfg_reg.get_config(arch_id)
+    if shape_id == "long_500k":
+        sub_quadratic = (cfg.block_pattern in ("mamba", "hybrid")
+                         or cfg.window is not None)
+        if not sub_quadratic:
+            return False, ("full-attention arch: 500k dense-KV decode "
+                           "out of spec (DESIGN.md §5)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def runtime_config(arch_id: str) -> lm_lib.LMConfig:
+    """Full config tuned for the production run: bf16 + remat + SP.
+
+    REPRO_PERF_* env knobs toggle the §Perf hillclimb changes so baseline
+    and optimized lowerings of the same cell can be A/B-measured.
+    """
+    import os
+    cfg = cfg_reg.get_config(arch_id)
+    cfg = dataclasses.replace(cfg, dtype=jnp.bfloat16, remat=True,
+                              act_shard=True)
+    if os.environ.get("REPRO_PERF_ATTN_SKIP"):
+        cfg = dataclasses.replace(cfg, attn_causal_skip=True)
+    if os.environ.get("REPRO_PERF_UNROLL_DECODE"):
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    return cfg
+
+
+def batch_specs(cfg: lm_lib.LMConfig, shape: ShapeSpec, mesh):
+    """Training/prefill batch as sharded ShapeDtypeStructs."""
+    dp = shd.logical_spec(("dp",), mesh)[0]
+    B, S = shape.batch, shape.seq
+    batch = {}
+    if cfg.embed_inputs:
+        batch["tokens"] = _sds((B, S), jnp.int32, mesh, P(dp, None))
+    else:
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                               P(dp, None, None))
+        batch["labels"] = _sds((B, S), jnp.int32, mesh, P(dp, None))
+    if cfg.encoder is not None:
+        enc_len = S if shape.kind != "decode" else ENC_LEN_DECODE
+        batch["enc_embeds"] = _sds((B, enc_len, cfg.d_model), jnp.bfloat16,
+                                   mesh, P(dp, None, None))
+    return batch
+
+
+def _kv_head_axis(cfg, mesh) -> Tuple[Optional[str], Optional[str]]:
+    """Shard KV-cache heads over tp when divisible, else head_dim."""
+    tp = shd.logical_spec(("tp",), mesh)[0]
+    if tp is None:
+        return None, None
+    tp_size = mesh.shape["model"]
+    if cfg.n_kv_heads % tp_size == 0:
+        return tp, None
+    return None, tp
+
+
+def cache_specs(cfg: lm_lib.LMConfig, shape: ShapeSpec, mesh,
+                as_sharding_only: bool = False):
+    """Abstract decode cache with per-leaf shardings (by leaf path name)."""
+    B, S = shape.batch, shape.seq
+    enc_len = ENC_LEN_DECODE if cfg.encoder is not None else 0
+    shapes = jax.eval_shape(
+        lambda: decode_lib.init_cache(cfg, B, S, enc_len))
+    dp_ok = B % mesh.shape["data"] == 0 and B > 1
+    dp = shd.logical_spec(("dp",), mesh)[0] if dp_ok else None
+    head_ax, hd_ax = _kv_head_axis(cfg, mesh)
+    seq_ax = None
+    if not dp_ok:
+        seq_ax = "data"   # long_500k: shard cache length instead of batch
+
+    def spec_for(path, leaf):
+        name = shd.path_str(path).split("/")[-1]
+        if name in ("k", "v", "a_k", "a_v", "b_k", "b_v", "xk", "xv"):
+            return P(None, dp, seq_ax, head_ax, hd_ax)
+        if name == "h":        # (layers, B, di, n)
+            return P(None, dp, "model", None)
+        if name == "conv":     # (layers, B, K-1, di)
+            return P(None, dp, None, "model")
+        return P()             # pos scalar
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, shapes)
+    if as_sharding_only:
+        return jax.tree_util.tree_map(
+            lambda sp: NamedSharding(mesh, sp), specs)
+    return jax.tree_util.tree_map(
+        lambda l, sp: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+
+
+def param_specs(cfg: lm_lib.LMConfig, mesh):
+    shapes = jax.eval_shape(
+        lambda: lm_lib.init_lm(jax.random.PRNGKey(0), cfg))
+    shardings = shd.param_sharding_tree(shapes, mesh,
+                                        overrides=shd.arch_overrides(cfg))
+    sds = jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        shapes, shardings)
+    return sds, shardings
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def quantize_mask(params_sds, shardings, mesh):
+    """8-bit moments only where (a) the leaf is big enough to matter and
+    (b) the per-block stat layout (last dim -> last//256 blocks) still
+    divides the leaf's last-axis sharding — otherwise GSPMD replicates the
+    blocked f32 intermediates and the 'compression' costs memory."""
+    def f(l, sh):
+        if l.size < 1e8:
+            return False
+        spec = sh.spec
+        last_ax = spec[l.ndim - 1] if len(spec) >= l.ndim else None
+        if last_ax is None:
+            return True
+        n = _axis_size(mesh, last_ax)
+        return l.shape[-1] % 256 == 0 and (l.shape[-1] // 256) % n == 0
+
+    return jax.tree_util.tree_map(f, params_sds, shardings)
+
+
+def make_optimizer(cfg: lm_lib.LMConfig, params_sds=None, shardings=None,
+                   mesh=None) -> AdamW:
+    """8-bit Adam moments for >20B-param models (fits v5e HBM), fp32 else."""
+    big = cfg.param_count() > 20e9
+    mask = None
+    if big and params_sds is not None:
+        mask = quantize_mask(params_sds, shardings, mesh)
+    return AdamW(lr=3e-4, weight_decay=0.1, clip_norm=1.0,
+                 state_bits=8 if big else 32, quantize_mask=mask)
+
+
+def train_grad_accum(cfg: lm_lib.LMConfig) -> int:
+    """Microbatching for the activation-heavy families.
+
+    SSM (8x): the selective-scan state (B, S, d_inner, n) is ~n/2 residual
+    streams per layer. MoE (4x): the capacity-dispatch buffers (E, C, d)
+    run in f32 (see lm._moe_apply) and scale with local tokens. Both blow
+    the 16 GB/chip budget at per-device batch 16 without accumulation.
+    """
+    import os
+    if os.environ.get("REPRO_ACCUM"):
+        return int(os.environ["REPRO_ACCUM"])
+    if cfg.block_pattern in ("mamba", "hybrid"):
+        return 8
+    if cfg.moe is not None and cfg.block_pattern == "moe":
+        return 4     # olmoe: top-8 of 64 => large dispatch buffers
+    return 1         # llama4: top-1 of 128 => tiny capacity, no accum needed
+
+
+def opt_specs(opt: AdamW, params_sds, mesh, cfg=None):
+    shapes = jax.eval_shape(opt.init, params_sds)
+    overrides = shd.arch_overrides(cfg) if cfg is not None else ()
+
+    def f(path, leaf):
+        s = shd.path_str(path)
+        logical = shd.param_logical(s, leaf.ndim, "blocks" in s, overrides)
+        spec = shd.logical_spec(logical, mesh)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(f, shapes)
+
+
+# ---------------------------------------------------------------------------
+# step builders — return (fn, abstract_args, donate_argnums, out_shardings)
+# ---------------------------------------------------------------------------
+
+def _sh(sds_tree):
+    """ShapeDtypeStruct tree -> its sharding tree (for out_shardings)."""
+    return jax.tree_util.tree_map(lambda l: l.sharding, sds_tree)
+
+
+def build_cell(arch_id: str, shape_id: str, mesh):
+    cfg = runtime_config(arch_id)
+    shape = SHAPES[shape_id]
+
+    if shape.kind == "train":
+        params_sds, param_shardings = param_specs(cfg, mesh)
+        opt = make_optimizer(cfg, params_sds, param_shardings, mesh)
+        opt_sds = opt_specs(opt, params_sds, mesh, cfg)
+        batch_sds = batch_specs(cfg, shape, mesh)
+        accum = train_grad_accum(cfg)
+
+        def pin(grads):
+            """Gradients always carry the parameter's sharding — otherwise
+            GSPMD may leave the optimizer's f32 temporaries for the large
+            embed/head tables nearly replicated (multi-GiB per device)."""
+            return jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, grads, param_shardings)
+
+        def train_step(params, opt_state, batch):
+            if accum == 1:
+                (loss, _), grads = jax.value_and_grad(
+                    lambda p: lm_lib.lm_loss(p, cfg, batch),
+                    has_aux=True)(params)
+                grads = pin(grads)
+            else:
+                micro = jax.tree_util.tree_map(
+                    lambda x: x.reshape((accum, x.shape[0] // accum)
+                                        + x.shape[1:]), batch)
+
+                def body(acc, mb):
+                    (l, _), g = jax.value_and_grad(
+                        lambda p: lm_lib.lm_loss(p, cfg, mb),
+                        has_aux=True)(params)
+                    return (jax.tree_util.tree_map(jnp.add, acc[0], pin(g)),
+                            acc[1] + l), None
+
+                zero = pin(jax.tree_util.tree_map(
+                    lambda l: jnp.zeros(l.shape, jnp.float32), params))
+                (grads, loss), _ = jax.lax.scan(
+                    body, (zero, jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+                loss = loss / accum
+            new_p, new_s = opt.update(grads, opt_state, params)
+            return new_p, new_s, {"loss": loss}
+
+        out_sh = (_sh(params_sds), _sh(opt_sds), None)
+        return train_step, (params_sds, opt_sds, batch_sds), (0, 1), out_sh
+
+    if shape.kind == "prefill":
+        params_sds, _ = param_specs(cfg, mesh)
+        batch_sds = batch_specs(cfg, shape, mesh)
+
+        def prefill_step(params, batch):
+            return decode_lib.prefill(params, cfg, batch, max_len=shape.seq)
+
+        cache_sh = cache_specs(cfg, shape, mesh, as_sharding_only=True)
+        dp = shd.logical_spec(("dp",), mesh)[0]
+        tp = shd.logical_spec(("tp",), mesh)[0]
+        logits_sh = NamedSharding(mesh, P(dp, None, tp))
+        return (prefill_step, (params_sds, batch_sds), (),
+                (logits_sh, cache_sh))
+
+    # decode: one new token against a seq_len cache
+    params_sds, _ = param_specs(cfg, mesh)
+    cache_sds = cache_specs(cfg, shape, mesh)
+    dp_ok = shape.batch % mesh.shape["data"] == 0 and shape.batch > 1
+    dp = shd.logical_spec(("dp",), mesh)[0] if dp_ok else None
+    B = shape.batch
+    if cfg.embed_inputs:
+        tok_sds = _sds((B,), jnp.int32, mesh, P(dp))
+
+        def serve_step(params, cache, tokens):
+            return decode_lib.decode_step(params, cfg, cache, tokens=tokens)
+
+        cache_sh = cache_specs(cfg, shape, mesh, as_sharding_only=True)
+        tp = shd.logical_spec(("tp",), mesh)[0]
+        logits_sh = NamedSharding(mesh, P(dp, tp))
+        return (serve_step, (params_sds, cache_sds, tok_sds), (1,),
+                (logits_sh, cache_sh))
+
+    emb_sds = _sds((B, 1, cfg.d_model), jnp.bfloat16, mesh, P(dp, None, None))
+
+    def serve_step_e(params, cache, embeds):
+        return decode_lib.decode_step(params, cfg, cache, embeds=embeds)
+
+    cache_sh = cache_specs(cfg, shape, mesh, as_sharding_only=True)
+    tp = shd.logical_spec(("tp",), mesh)[0]
+    logits_sh = NamedSharding(mesh, P(dp, tp))
+    return (serve_step_e, (params_sds, cache_sds, emb_sds), (1,),
+            (logits_sh, cache_sh))

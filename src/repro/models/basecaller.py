@@ -1,0 +1,245 @@
+"""DNN base-callers (paper Table 3): Conv -> GRU/LSTM stack -> FC -> CTC.
+
+Guppy / Scrappie / Chiron are instances of one configurable family:
+convolutional feature extraction over the raw current signal, a recurrent
+stack integrating those features into base probabilities, and a linear head
+over [A, C, G, T, blank].
+
+All projections route through ``core.quant.qdense`` so a single
+``QuantConfig`` turns the whole model into its FQN-style fake-quantized twin
+(the serving engine swaps these matmuls for the ``quant_matmul`` Pallas
+kernel).  Parameters are plain pytrees; ``init_basecaller``/
+``apply_basecaller`` are the public API.
+
+Note on Table 3: the paper's MAC/param numbers are internally inconsistent
+(see DESIGN.md §8); presets reproduce the stated *structures* and
+``benchmarks/table3_models.py`` reports our computed counts next to the
+paper's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig, fq_act, fq_weight, qdense
+
+N_BASES = 4
+N_CLASSES = 5  # A C G T blank
+BLANK = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    kernel: int
+    channels: int
+    stride: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class BasecallerConfig:
+    name: str = "guppy"
+    input_len: int = 300            # signal window (paper: 300 x 1)
+    in_channels: int = 1
+    conv: Tuple[ConvSpec, ...] = (ConvSpec(11, 96, 2),)
+    rnn_type: str = "gru"           # "gru" | "lstm"
+    rnn_layers: int = 5
+    rnn_hidden: int = 96
+    rnn_direction: str = "alt"      # "uni" | "bidi" | "alt"
+    n_classes: int = N_CLASSES
+    quant: QuantConfig = QuantConfig()
+
+    @property
+    def output_len(self) -> int:
+        t = self.input_len
+        for c in self.conv:
+            t = -(-t // c.stride)  # ceil div ("SAME" padding)
+        return t
+
+    def with_quant(self, q: QuantConfig) -> "BasecallerConfig":
+        return dataclasses.replace(self, quant=q)
+
+
+# presets approximating paper Table 3 structures
+GUPPY = BasecallerConfig(
+    name="guppy", conv=(ConvSpec(11, 96, 2),),
+    rnn_type="gru", rnn_layers=5, rnn_hidden=96, rnn_direction="alt")
+SCRAPPIE = BasecallerConfig(
+    name="scrappie", conv=(ConvSpec(11, 96, 5),),
+    rnn_type="gru", rnn_layers=5, rnn_hidden=64, rnn_direction="alt")
+CHIRON = BasecallerConfig(
+    name="chiron",
+    conv=tuple([ConvSpec(1, 256, 1)] +
+               [s for _ in range(5) for s in
+                (ConvSpec(1, 256, 1), ConvSpec(3, 256, 1), ConvSpec(1, 256, 1))]),
+    rnn_type="lstm", rnn_layers=3, rnn_hidden=100, rnn_direction="bidi")
+
+PRESETS = {"guppy": GUPPY, "scrappie": SCRAPPIE, "chiron": CHIRON}
+
+
+def tiny_preset(name: str = "guppy") -> BasecallerConfig:
+    """Reduced config for CPU tests: same family, small widths."""
+    base = PRESETS[name]
+    conv = tuple(ConvSpec(c.kernel, 16, c.stride) for c in base.conv[:2])
+    return dataclasses.replace(base, input_len=120, conv=conv,
+                               rnn_layers=2, rnn_hidden=16)
+
+
+def demo_preset(name: str = "guppy") -> BasecallerConfig:
+    """CPU-trainable demo config: learns a 1-mer pore channel to ~70 %
+    read accuracy in ~300 steps (examples/, benchmarks/fig21)."""
+    base = PRESETS[name]
+    return dataclasses.replace(base, input_len=120,
+                               conv=(ConvSpec(9, 24, 2),),
+                               rnn_layers=2, rnn_hidden=32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale=None):
+    scale = scale or (1.0 / jnp.sqrt(shape[0]))
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def init_basecaller(key, cfg: BasecallerConfig):
+    keys = jax.random.split(key, 2 + len(cfg.conv) + cfg.rnn_layers)
+    params = {"conv": [], "rnn": [], "fc": None}
+    cin = cfg.in_channels
+    for i, spec in enumerate(cfg.conv):
+        k = keys[i]
+        w = _dense_init(k, (spec.kernel, cin, spec.channels),
+                        1.0 / jnp.sqrt(spec.kernel * cin))
+        params["conv"].append({"w": w, "b": jnp.zeros((spec.channels,))})
+        cin = spec.channels
+
+    gates = 3 if cfg.rnn_type == "gru" else 4
+    h = cfg.rnn_hidden
+    feat = cin
+    for i in range(cfg.rnn_layers):
+        k1, k2 = jax.random.split(keys[len(cfg.conv) + i])
+        layer_in = feat if i == 0 else (
+            2 * h if cfg.rnn_direction == "bidi" else h)
+        params["rnn"].append({
+            "w": _dense_init(k1, (layer_in, gates * h)),
+            "u": _dense_init(k2, (h, gates * h)),
+            "b": jnp.zeros((gates * h,)),
+        })
+    head_in = 2 * h if cfg.rnn_direction == "bidi" else h
+    params["fc"] = {"w": _dense_init(keys[-1], (head_in, cfg.n_classes)),
+                    "b": jnp.zeros((cfg.n_classes,))}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def _conv1d(x, w, b, stride, q: QuantConfig):
+    """x: (B, T, C) 'SAME' conv with quantization-aware weights/acts."""
+    xq = fq_act(x, q)
+    wq = fq_weight(w, q)
+    y = jax.lax.conv_general_dilated(
+        xq, wq, window_strides=(stride,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return y + b
+
+
+def gru_cell(h, x_proj, u, b, q: QuantConfig):
+    """One GRU step given the precomputed input projection x_proj=(B,3h)."""
+    hdim = h.shape[-1]
+    gates = qdense(h, u, q) + x_proj + b
+    z = jax.nn.sigmoid(gates[..., :hdim])
+    r = jax.nn.sigmoid(gates[..., hdim:2 * hdim])
+    # candidate uses r ⊗ h inside the U product (Eq. 1) — recompute that slice
+    n_x = x_proj[..., 2 * hdim:] + b[2 * hdim:]
+    n_h = qdense(r * h, u[:, 2 * hdim:], q)
+    h_new = jax.nn.tanh(n_x + n_h)
+    return z * h + (1.0 - z) * h_new
+
+
+def lstm_cell(state, x_proj, u, b, q: QuantConfig):
+    h, c = state
+    hdim = h.shape[-1]
+    gates = qdense(h, u, q) + x_proj + b
+    i = jax.nn.sigmoid(gates[..., :hdim])
+    f = jax.nn.sigmoid(gates[..., hdim:2 * hdim] + 1.0)  # forget bias 1
+    g = jax.nn.tanh(gates[..., 2 * hdim:3 * hdim])
+    o = jax.nn.sigmoid(gates[..., 3 * hdim:])
+    c_new = f * c + i * g
+    return (o * jax.nn.tanh(c_new), c_new)
+
+
+def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool):
+    """x: (B, T, F) -> (B, T, H). Input projection hoisted out of the scan."""
+    q = cfg.quant
+    B, T, F = x.shape
+    h = cfg.rnn_hidden
+    x_proj = qdense(x, layer["w"], q)        # (B, T, gates*h)
+    x_proj = jnp.swapaxes(x_proj, 0, 1)      # (T, B, gates*h)
+
+    if cfg.rnn_type == "gru":
+        def step(hs, xp):
+            hn = gru_cell(hs, xp, layer["u"], layer["b"], q)
+            return hn, hn
+        init = jnp.zeros((B, h))
+    else:
+        def step(hs, xp):
+            hn = lstm_cell(hs, xp, layer["u"], layer["b"], q)
+            return hn, hn[0]
+        init = (jnp.zeros((B, h)), jnp.zeros((B, h)))
+
+    _, ys = jax.lax.scan(step, init, x_proj, reverse=reverse)
+    return jnp.swapaxes(ys, 0, 1)
+
+
+def apply_basecaller(params, signal, cfg: BasecallerConfig):
+    """signal: (B, T, C) -> log-probs (B, T_out, n_classes)."""
+    x = signal
+    for p, spec in zip(params["conv"], cfg.conv):
+        x = jax.nn.relu(_conv1d(x, p["w"], p["b"], spec.stride, cfg.quant))
+
+    for i, layer in enumerate(params["rnn"]):
+        if cfg.rnn_direction == "bidi":
+            fwd = _run_rnn(x, layer, cfg, reverse=False)
+            bwd = _run_rnn(x, layer, cfg, reverse=True)
+            x = jnp.concatenate([fwd, bwd], axis=-1)
+        else:
+            reverse = (cfg.rnn_direction == "alt") and (i % 2 == 1)
+            x = _run_rnn(x, layer, cfg, reverse=reverse)
+
+    logits = qdense(x, params["fc"]["w"], cfg.quant, params["fc"]["b"])
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# accounting (benchmarks/table3)
+# ---------------------------------------------------------------------------
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def count_macs(cfg: BasecallerConfig) -> dict:
+    """Analytical MAC counts per stage for one input window."""
+    t = cfg.input_len
+    cin = cfg.in_channels
+    conv_macs = 0
+    for c in cfg.conv:
+        t = -(-t // c.stride)
+        conv_macs += t * c.kernel * cin * c.channels
+        cin = c.channels
+    gates = 3 if cfg.rnn_type == "gru" else 4
+    h = cfg.rnn_hidden
+    ndir = 2 if cfg.rnn_direction == "bidi" else 1
+    rnn_macs = 0
+    feat = cin
+    for i in range(cfg.rnn_layers):
+        fin = feat if i == 0 else ndir * h
+        rnn_macs += ndir * t * gates * (fin * h + h * h)
+    fc_macs = t * ndir * h * cfg.n_classes
+    return {"conv": conv_macs, "rnn": rnn_macs, "fc": fc_macs,
+            "total": conv_macs + rnn_macs + fc_macs}

@@ -1,0 +1,334 @@
+"""Prefill + single-token decode with per-family caches.
+
+Cache kinds (leading n_blocks dim, scanned together with the block params):
+  attn / moe          : {"k","v"} (B, L, Kv, hd)    L = max_len or SWA window
+  mamba               : {"h"} (B, di, n), {"conv"} (B, K-1, di)   O(1) state
+  hybrid (hymba)      : attn ∪ mamba caches
+  alt_dense_moe       : two attn caches (sublayers a, b)
+  encdec (seamless)   : self {"k","v"} + fixed cross {"xk","xv"}
+
+SWA uses a ring buffer of size ``window`` — this is what makes
+``long_500k`` decodable for h2o-danube/hymba with O(window) memory, and the
+SSM state is what makes it O(1) for falcon-mamba (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qdense
+from repro.dist.sharding import constrain
+from repro.models import lm as lm_lib
+from repro.models.layers import decode_attention, mamba_mix
+from repro.models.lm import (LMConfig, _block, _enc_kv, _mlp, _moe_apply,
+                             _norm, _positions, _qkv, _run_encoder,
+                             _self_attn)
+
+
+def cache_len(cfg: LMConfig, max_len: int) -> int:
+    return min(cfg.window, max_len) if cfg.window else max_len
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def _attn_cache(cfg: LMConfig, B: int, L: int, prefix=""):
+    shape = (B, L, cfg.n_kv_heads, cfg.hd)
+    return {prefix + "k": jnp.zeros(shape, cfg.dtype),
+            prefix + "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def _mamba_cache(cfg: LMConfig, B: int):
+    di = cfg.ssm.inner(cfg.d_model)
+    return {"h": jnp.zeros((B, di, cfg.ssm.d_state), jnp.float32),
+            "conv": jnp.zeros((B, cfg.ssm.d_conv - 1, di), cfg.dtype)}
+
+
+def _block_cache(cfg: LMConfig, B: int, L: int, enc_len: int = 0):
+    kind = lm_lib._decoder_kind(cfg)
+    if kind in ("attn", "moe"):
+        return _attn_cache(cfg, B, L)
+    if kind == "mamba":
+        return _mamba_cache(cfg, B)
+    if kind == "hybrid":
+        return {**_attn_cache(cfg, B, L), **_mamba_cache(cfg, B)}
+    if kind == "alt_dense_moe":
+        return {**_attn_cache(cfg, B, L, "a_"), **_attn_cache(cfg, B, L, "b_")}
+    if kind == "encdec":
+        c = _attn_cache(cfg, B, L)
+        c["xk"] = jnp.zeros((B, enc_len, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        c["xv"] = jnp.zeros((B, enc_len, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        return c
+    raise ValueError(kind)
+
+
+def init_cache(cfg: LMConfig, B: int, max_len: int, enc_len: int = 0):
+    """pos is PER-SLOT (B,) so continuous batching can admit requests into
+    individual lanes while others keep decoding."""
+    L = cache_len(cfg, max_len)
+    blocks = jax.vmap(lambda _: _block_cache(cfg, B, L, enc_len))(
+        jnp.arange(cfg.n_blocks))
+    return {"blocks": blocks, "pos": jnp.zeros((B,), jnp.int32)}
+
+
+def _shard_cache(cache, cfg):
+    if not cfg.act_shard:
+        return cache
+
+    def f(x):
+        if x.ndim == 5:     # (layers, B, L, Kv, hd)
+            return constrain(x, (None, "dp", None, "tp", None))
+        if x.ndim == 4:     # (layers, B, di, n) or (layers, B, K-1, di)
+            return constrain(x, (None, "dp", None, "tp")) \
+                if x.shape[-1] > x.shape[-2] else \
+                constrain(x, (None, "dp", "tp", None))
+        return x
+
+    blocks = jax.tree_util.tree_map(f, cache["blocks"])
+    return {"blocks": blocks, "pos": cache["pos"]}
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _ring_write(k: jnp.ndarray, L: int) -> jnp.ndarray:
+    """Write a (B, S, Kv, hd) prefix into an L-slot ring (slot = pos % L)."""
+    B, S, Kv, hd = k.shape
+    buf = jnp.zeros((B, L, Kv, hd), k.dtype)
+    if S <= L:
+        return buf.at[:, :S].set(k)
+    tail = k[:, -L:]
+    slots = (jnp.arange(S - L, S)) % L
+    return buf.at[:, slots].set(tail)
+
+
+def _prefill_attn(x, bp, cfg, pos, L):
+    """Self-attention sublayer that also emits its KV cache."""
+    B, S, _ = x.shape
+    h = x
+    q, k, v = _qkv(h, bp, cfg, pos)
+    out = lm_lib.flash_attention(q, k, v, causal=True, window=cfg.window,
+                                 bq=cfg.attn_chunk, bk=cfg.attn_chunk,
+                                 causal_skip=cfg.attn_causal_skip)
+    out = qdense(out.reshape(B, S, -1), bp["wo"], cfg.quant)
+    return out, {"k": _ring_write(k, L), "v": _ring_write(v, L)}
+
+
+def prefill(params, cfg: LMConfig, batch, max_len: int,
+            last_only: bool = True):
+    """Full-sequence forward that returns (logits, cache ready for decode).
+
+    ``last_only`` (production default) emits only the last position's
+    logits — materializing (B, S, V) at 32k prefill is ~20 GB/device of
+    pure waste when the server only samples the next token.
+    """
+    if cfg.embed_inputs:
+        x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+    else:
+        x = batch["embeds"].astype(cfg.dtype)
+    B, S, _ = x.shape
+    L = cache_len(cfg, max_len)
+    pos = _positions(cfg, B, S)
+    kind = lm_lib._decoder_kind(cfg)
+    if cfg.act_shard:
+        x = constrain(x, ("dp", "tp", None))
+
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _run_encoder(params, cfg, batch["enc_embeds"])
+
+    def body(x, bp):
+        cache = {}
+        if kind in ("attn", "moe"):
+            y, kv = _prefill_attn(_norm(x, bp["ln1"], cfg), bp["attn"], cfg,
+                                  pos, L)
+            x = x + y
+            cache.update(kv)
+            if kind == "attn":
+                x = x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+            else:
+                y, _ = _moe_apply(_norm(x, bp["ln2"], cfg), bp["moe"], cfg)
+                x = x + y
+        elif kind == "mamba":
+            y, st = mamba_mix(_norm(x, bp["ln1"], cfg), bp["mamba"], cfg.ssm,
+                              cfg.d_model)
+            x = x + y
+            cache.update(st)
+        elif kind == "hybrid":
+            h = _norm(x, bp["ln1"], cfg)
+            att, kv = _prefill_attn(h, bp["attn"], cfg, pos, L)
+            ssm, st = mamba_mix(h, bp["mamba"], cfg.ssm, cfg.d_model)
+            x = x + 0.5 * (att + ssm)
+            x = x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+            cache.update(kv)
+            cache.update(st)
+        elif kind == "alt_dense_moe":
+            y, kva = _prefill_attn(_norm(x, bp["ln1a"], cfg), bp["attn_a"],
+                                   cfg, pos, L)
+            x = x + y
+            x = x + _mlp(_norm(x, bp["ln2a"], cfg), bp["mlp"], cfg,
+                         cfg.d_ff_dense)
+            y, kvb = _prefill_attn(_norm(x, bp["ln1b"], cfg), bp["attn_b"],
+                                   cfg, pos, L)
+            x = x + y
+            y, _ = _moe_apply(_norm(x, bp["ln2b"], cfg), bp["moe"], cfg)
+            x = x + y
+            cache.update({"a_" + n: t for n, t in kva.items()})
+            cache.update({"b_" + n: t for n, t in kvb.items()})
+        elif kind == "encdec":
+            y, kv = _prefill_attn(_norm(x, bp["ln1"], cfg), bp["attn"], cfg,
+                                  pos, L)
+            x = x + y
+            cache.update(kv)
+            xk, xv = _enc_kv(bp["xattn"], cfg, enc_out)
+            x = x + lm_lib._cross_attn(_norm(x, bp["lnx"], cfg), bp["xattn"],
+                                       cfg, (xk, xv))
+            x = x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+            cache.update({"xk": xk, "xv": xv})
+        else:
+            raise ValueError(kind)
+        if cfg.act_shard:
+            x = constrain(x, ("dp", "tp", None))
+        return x, cache
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = jax.lax.scan(fn, x, params["blocks"])
+    x = _norm(x, params["final_norm"], cfg)
+    if last_only:
+        x = x[:, -1:]
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = qdense(x, head, cfg.quant)
+    cache = {"blocks": caches, "pos": jnp.full((B,), S, jnp.int32)}
+    return logits, _shard_cache(cache, cfg)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _decode_attn(x, bp, cfg: LMConfig, cache, prefix, p, active):
+    """One-token self-attention against the ring cache.
+
+    x: (B, 1, d); p: (B,) per-slot positions; active: (B,) bool — inactive
+    lanes neither write their KV (write slot is dropped) nor advance.
+    """
+    B = x.shape[0]
+    k_c, v_c = cache[prefix + "k"], cache[prefix + "v"]
+    L = k_c.shape[1]
+    pos = _positions(cfg, B, 1, offset=p)
+    q, k, v = _qkv(x, bp, cfg, pos)
+    slot = jnp.where(active, p % L, L)            # L => dropped write
+    k_c = k_c.at[jnp.arange(B), slot].set(k[:, 0], mode="drop")
+    v_c = v_c.at[jnp.arange(B), slot].set(v[:, 0], mode="drop")
+    n_valid = jnp.minimum(p + 1, L)
+    valid = jnp.arange(L)[None] < n_valid[:, None]
+    out = decode_attention(q, k_c, v_c, valid)
+    out = qdense(out.reshape(B, 1, -1), bp["wo"], cfg.quant)
+    return out, {prefix + "k": k_c, prefix + "v": v_c}
+
+
+def decode_step(params, cfg: LMConfig, cache, tokens=None, embeds=None,
+                active=None):
+    """One decoding step for the whole batch.
+
+    tokens: (B,) int32 (or embeds (B, 1, d) for stub-frontend archs).
+    active: optional (B,) bool — continuous batching lane mask.
+    Returns (logits (B, vocab), new cache).
+    """
+    if tokens is not None:
+        x = params["embed"][tokens][:, None].astype(cfg.dtype)
+    else:
+        x = embeds.astype(cfg.dtype)
+    B = x.shape[0]
+    if active is None:
+        active = jnp.ones((B,), bool)
+    p = cache["pos"]
+    kind = lm_lib._decoder_kind(cfg)
+
+    def keep(new, old):
+        """Mask recurrent-state updates for inactive lanes."""
+        ex = (slice(None),) + (None,) * (new.ndim - 1)
+        return jnp.where(active[ex], new, old)
+
+    def body(x, bp_cache):
+        bp, bc = bp_cache
+        new_c = dict(bc)
+        if kind in ("attn", "moe"):
+            y, kv = _decode_attn(_norm(x, bp["ln1"], cfg), bp["attn"], cfg,
+                                 bc, "", p, active)
+            x = x + y
+            new_c.update(kv)
+            if kind == "attn":
+                x = x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+            else:
+                y, _ = _moe_apply(_norm(x, bp["ln2"], cfg), bp["moe"], cfg)
+                x = x + y
+        elif kind == "mamba":
+            y, st = mamba_mix(_norm(x, bp["ln1"], cfg), bp["mamba"], cfg.ssm,
+                              cfg.d_model,
+                              state={"h": bc["h"], "conv": bc["conv"]})
+            x = x + y
+            new_c.update({k_: keep(v_, bc[k_]) for k_, v_ in st.items()})
+        elif kind == "hybrid":
+            h = _norm(x, bp["ln1"], cfg)
+            att, kv = _decode_attn(h, bp["attn"], cfg, bc, "", p, active)
+            ssm, st = mamba_mix(h, bp["mamba"], cfg.ssm, cfg.d_model,
+                                state={"h": bc["h"], "conv": bc["conv"]})
+            x = x + 0.5 * (att + ssm)
+            x = x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+            new_c.update(kv)
+            new_c.update({k_: keep(v_, bc[k_]) for k_, v_ in st.items()})
+        elif kind == "alt_dense_moe":
+            y, kva = _decode_attn(_norm(x, bp["ln1a"], cfg), bp["attn_a"],
+                                  cfg, bc, "a_", p, active)
+            x = x + y
+            x = x + _mlp(_norm(x, bp["ln2a"], cfg), bp["mlp"], cfg,
+                         cfg.d_ff_dense)
+            y, kvb = _decode_attn(_norm(x, bp["ln1b"], cfg), bp["attn_b"],
+                                  cfg, bc, "b_", p, active)
+            x = x + y
+            y, _ = _moe_apply(_norm(x, bp["ln2b"], cfg), bp["moe"], cfg)
+            x = x + y
+            new_c.update(kva)
+            new_c.update(kvb)
+        elif kind == "encdec":
+            y, kv = _decode_attn(_norm(x, bp["ln1"], cfg), bp["attn"], cfg,
+                                 bc, "", p, active)
+            x = x + y
+            new_c.update(kv)
+            B_ = x.shape[0]
+            enc_valid = jnp.ones((B_, bc["xk"].shape[1]), bool)
+            q = qdense(_norm(x, bp["lnx"], cfg), bp["xattn"]["wq"],
+                       cfg.quant).reshape(B_, 1, cfg.n_heads, cfg.hd)
+            att = decode_attention(q, bc["xk"], bc["xv"], enc_valid)
+            x = x + qdense(att.reshape(B_, 1, -1), bp["xattn"]["wo"],
+                           cfg.quant)
+            x = x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+        else:
+            raise ValueError(kind)
+        return x, new_c
+
+    if cfg.scan_layers:
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"],
+                                               cache["blocks"]))
+    else:
+        # §Perf H3: python-unrolled decode layers — per-layer cache slices
+        # update in place via .at[i].set (XLA aliases the donated buffers,
+        # where the while-loop form double-buffers the whole cache)
+        new_blocks = cache["blocks"]
+        for i in range(cfg.n_blocks):
+            bp_i = jax.tree_util.tree_map(lambda t: t[i], params["blocks"])
+            bc_i = jax.tree_util.tree_map(lambda t: t[i], cache["blocks"])
+            x, nc_i = body(x, (bp_i, bc_i))
+            new_blocks = jax.tree_util.tree_map(
+                lambda full, new: full.at[i].set(new), new_blocks, nc_i)
+    x = _norm(x, params["final_norm"], cfg)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = qdense(x[:, 0], head, cfg.quant)
+    new_cache = {"blocks": new_blocks,
+                 "pos": jnp.where(active, p + 1, p)}
+    return logits, _shard_cache(new_cache, cfg)

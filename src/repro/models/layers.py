@@ -1,0 +1,563 @@
+"""LM building blocks: norms, RoPE/M-RoPE, flash-chunked attention, SwiGLU,
+MoE (top-k capacity dispatch), Mamba-1 SSM.
+
+Design constraints (see DESIGN.md §5/§6):
+* pure functions over parameter pytrees — pjit shards them by path-name rules;
+* attention never materializes the (S, S) score matrix: a two-level
+  lax.scan over (q-chunk, kv-chunk) with an online softmax keeps the working
+  set O(bq*bk) per device (flash-attention structure, pure jnp so the
+  multi-pod dry-run compiles on any backend);
+* MoE uses sort-based capacity dispatch (static shapes, EP-shardable);
+* Mamba's selective scan uses an associative scan over time for training
+  and an O(1) carried state for decode.
+
+All matmuls take ``preferred_element_type=f32`` where accumulation matters;
+activations run in the config dtype (bf16 on TPU, f32 in CPU tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1.0e9
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE + qwen2-vl's M-RoPE sections)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               sections: Optional[Tuple[int, ...]] = None) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) or (B, S, n_sections) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the D/2 frequency lanes are partitioned into
+    ``sections`` (temporal/height/width); each section rotates by its own
+    position stream.  With all streams equal it degenerates to plain RoPE.
+    """
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                      # (D/2,)
+    if positions.ndim == 2:
+        pos = positions[..., None].astype(jnp.float32)      # (B, S, 1)
+        angles = pos * freqs                                 # (B, S, D/2)
+    else:
+        n = positions.shape[-1]
+        assert sections is not None and sum(sections) == D // 2, (
+            sections, D)
+        sec_id = jnp.repeat(jnp.arange(n), jnp.asarray(sections),
+                            total_repeat_length=D // 2)      # (D/2,)
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec_id, positions.shape[:2] + (D // 2,)),
+            axis=-1)                                         # (B, S, D/2)
+        angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash-chunked attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_mask(qpos, kpos, causal, window, T):
+    ok = (kpos < T)[None, :]
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        ok &= (qpos[:, None] - kpos[None, :]) < window
+    return ok
+
+
+# Masking is ADDITIVE (a small (bq, bk) f32 bias), never a broadcast bool:
+# XLA hoists the layer-invariant mask computation out of the layers loop,
+# and a (B, Kv, G, bq, bk)-broadcast pred stacked over (nq, nk) blocks is
+# GiB-scale; the f32 bias stack is (nq, nk, bq, bk) — a few MiB. The online
+# softmax keeps masked lanes at exp(<= MASK_NEG - M_INIT) == 0 because the
+# running max is floored at M_INIT > MASK_NEG.
+MASK_NEG = -1.0e9
+M_INIT = -0.5e9
+
+
+def _block_bias(qpos, kpos, causal, window, T):
+    return jnp.where(_block_mask(qpos, kpos, causal, window, T),
+                     0.0, MASK_NEG).astype(jnp.float32)
+
+
+def _flash_blocks(q, k, v, bq, bk):
+    """Pad + reshape into (n, B, blk, heads..., D) chunk-major layouts."""
+    B, S, H, D = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    pq, pk = (-S) % bq, (-T) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    nq, nk = (S + pq) // bq, (T + pk) // bk
+    qb = qp.reshape(B, nq, bq, Kv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kb = kp.reshape(B, nk, bk, Kv, D).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, bk, Kv, D).transpose(1, 0, 2, 3, 4)
+    return qb, kb, vb, nq, nk
+
+
+def _kv_range(qi, bq, bk, nk, causal, window, q_offset):
+    """Static kv-chunk range [lo, hi) a causal/windowed q-chunk touches."""
+    hi = nk
+    if causal:
+        hi = min(nk, (q_offset + (qi + 1) * bq + bk - 1) // bk)
+    lo = 0
+    if window is not None:
+        lo = max(0, (q_offset + qi * bq - window + 1) // bk)
+    return min(lo, hi - 1), max(hi, lo + 1)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, bq, bk, q_offset,
+                    causal_skip=False):
+    """Returns (out (B,S,H,D), lse (B,Kv,G,Sp)) — O(bq*bk) working set.
+
+    ``causal_skip`` (§Perf hillclimb H1): unroll the q-chunk loop in Python
+    and give each chunk a STATICALLY sliced kv range, skipping fully-masked
+    blocks — ~2x fewer attention FLOPs for causal self-attention, at the
+    cost of O(nq) HLO size (use when nq is small, e.g. <= 16).
+    """
+    B, S, H, D = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = D ** -0.5
+    bq, bk = min(bq, S), min(bk, T)
+    qb, kb, vb, nq, nk = _flash_blocks(q, k, v, bq, bk)
+    qb = qb.astype(jnp.float32) * scale
+
+    def run_q_block(qi, qblk, kb_sl, vb_sl, kj0):
+        qpos = jnp.arange(bq) + q_offset + qi * bq
+
+        def kv_block(carry, kj_and_blocks):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_and_blocks
+            kpos = jnp.arange(bk) + kj * bk
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk,
+                           kblk.astype(jnp.float32))        # (B,Kv,G,bq,bk)
+            s = s + _block_bias(qpos, kpos, causal, window, T)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = (acc * corr[..., None] +
+                       jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                                  vblk.astype(jnp.float32)))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, Kv, G, bq), M_INIT, jnp.float32),
+                jnp.zeros((B, Kv, G, bq), jnp.float32),
+                jnp.zeros((B, Kv, G, bq, D), jnp.float32))
+        nk_sl = kb_sl.shape[0]
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init, (jnp.arange(kj0, kj0 + nk_sl), kb_sl, vb_sl))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]        # (B,Kv,G,bq,D)
+        lse = m + jnp.log(jnp.maximum(l, 1e-20))            # (B,Kv,G,bq)
+        return out.transpose(0, 3, 1, 2, 4), lse
+
+    if causal_skip and nq > 1:
+        outs, lses = [], []
+        for qi in range(nq):
+            lo, hi = _kv_range(qi, bq, bk, nk, causal, window, q_offset)
+            o, s_ = run_q_block(qi, qb[qi], kb[lo:hi], vb[lo:hi], lo)
+            outs.append(o)
+            lses.append(s_)
+        outs, lses = jnp.stack(outs), jnp.stack(lses)
+    else:
+        def q_block(_, qi_and_block):
+            qi, qblk = qi_and_block                         # (B,bq,Kv,G,D)
+            return None, run_q_block(qi, qblk, kb, vb, 0)
+
+        _, (outs, lses) = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * bq, H, D)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, Kv, G, nq * bq)
+    return out[:, :S].astype(q.dtype), lse
+
+
+def _q_range(kj, bq, bk, nq, causal, window, q_offset):
+    """Static q-chunk range [lo, hi) that touches kv chunk kj."""
+    lo = 0
+    if causal:
+        lo = max(0, (kj * bk - q_offset - bq + 1 + bq - 1) // bq)
+        lo = max(0, (kj * bk - q_offset) // bq)
+    hi = nq
+    if window is not None:
+        # q_pos - k_pos < window  =>  qi*bq + q_offset < kj*bk + bk + window
+        hi = min(nq, (kj * bk + bk - 1 + window - q_offset) // bq + 1)
+    lo = min(lo, hi - 1)
+    return max(lo, 0), max(hi, lo + 1)
+
+
+def _flash_fwd(q, k, v, causal, window, bq, bk, q_offset, causal_skip):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, bq, bk, q_offset,
+                               causal_skip)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, bq, bk, q_offset, causal_skip, res, dout):
+    """FA2-style backward: recompute p blockwise from (q,k,v,lse); two
+    chunked passes (dq; then dk/dv). Saves only O(S*D) residuals."""
+    q, k, v, out, lse = res
+    B, S, H, D = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = D ** -0.5
+    bq_, bk_ = min(bq, S), min(bk, T)
+    qb, kb, vb, nq, nk = _flash_blocks(q, k, v, bq_, bk_)
+    qb = qb.astype(jnp.float32) * scale
+    dob = _flash_blocks(dout, k, v, bq_, bk_)[0]
+    ob = _flash_blocks(out, k, v, bq_, bk_)[0]
+    # delta_i = rowsum(dout * out): (B,Kv,G,bq) per q block
+    delta = jnp.einsum("nbqhgd,nbqhgd->nbhgq",
+                       dob.astype(jnp.float32), ob.astype(jnp.float32))
+    pq = nq * bq_ - S
+    lse_b = (jnp.pad(lse, ((0, 0),) * 3 + ((0, pq),))
+             .reshape(B, Kv, G, nq, bq_).transpose(3, 0, 1, 2, 4))
+
+    def p_block(qblk, kblk, lse_i, qpos, kpos):
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk.astype(jnp.float32))
+        s = s + _block_bias(qpos, kpos, causal, window, T)
+        return jnp.exp(s - lse_i[..., None])
+
+    # ---- pass A: dq -------------------------------------------------------
+    def dq_block(_, xs):
+        qi, qblk, do_i, dl_i, lse_i = xs
+        qpos = jnp.arange(bq_) + q_offset + qi * bq_
+        do_f = do_i.astype(jnp.float32)
+
+        def inner(dq_acc, kv):
+            kj, kblk, vblk = kv
+            kpos = jnp.arange(bk_) + kj * bk_
+            p = p_block(qblk, kblk, lse_i, qpos, kpos)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_f,
+                            vblk.astype(jnp.float32))
+            ds = p * (dp - dl_i[..., None])
+            dq_acc += jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                                 kblk.astype(jnp.float32))
+            return dq_acc, None
+
+        lo, hi = ((0, nk) if not causal_skip else
+                  _kv_range(qi_static, bq_, bk_, nk, causal, window,
+                            q_offset))
+        dq_i, _ = jax.lax.scan(inner, jnp.zeros_like(qblk),
+                               (jnp.arange(lo, hi), kb[lo:hi], vb[lo:hi]))
+        return None, dq_i * scale
+
+    if causal_skip and nq > 1:
+        dq_list = []
+        for qi_static in range(nq):
+            _, dq_i = dq_block(None, (qi_static, qb[qi_static],
+                                      dob[qi_static], delta[qi_static],
+                                      lse_b[qi_static]))
+            dq_list.append(dq_i)
+        dqs = jnp.stack(dq_list)
+    else:
+        qi_static = None
+        _, dqs = jax.lax.scan(dq_block, None,
+                              (jnp.arange(nq), qb, dob, delta, lse_b))
+    dq = (dqs.transpose(1, 0, 2, 3, 4, 5)
+          .reshape(B, nq * bq_, H, D)[:, :S].astype(q.dtype))
+
+    # ---- pass B: dk, dv ---------------------------------------------------
+    def dkv_block(_, xs):
+        kj, kblk, vblk = xs
+        kpos = jnp.arange(bk_) + kj * bk_
+        kf = kblk.astype(jnp.float32)
+        vf = vblk.astype(jnp.float32)
+
+        def inner(carry, qs):
+            dk_acc, dv_acc = carry
+            qi, qblk, do_i, dl_i, lse_i = qs
+            qpos = jnp.arange(bq_) + q_offset + qi * bq_
+            p = p_block(qblk, kblk, lse_i, qpos, kpos)
+            do_f = do_i.astype(jnp.float32)
+            dv_acc += jnp.einsum("bhgqk,bqhgd->bkhd", p, do_f)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_f, vf)
+            ds = p * (dp - dl_i[..., None])
+            dk_acc += jnp.einsum("bhgqk,bqhgd->bkhd", ds, qblk)
+            return (dk_acc, dv_acc), None
+
+        lo, hi = ((0, nq) if not causal_skip else
+                  _q_range(kj_static, bq_, bk_, nq, causal, window,
+                           q_offset))
+        (dk_j, dv_j), _ = jax.lax.scan(
+            inner, (jnp.zeros_like(kf), jnp.zeros_like(vf)),
+            (jnp.arange(lo, hi), qb[lo:hi], dob[lo:hi], delta[lo:hi],
+             lse_b[lo:hi]))
+        return None, (dk_j, dv_j)
+
+    if causal_skip and nk > 1:
+        dk_list, dv_list = [], []
+        for kj_static in range(nk):
+            _, (dk_j, dv_j) = dkv_block(None, (kj_static, kb[kj_static],
+                                               vb[kj_static]))
+            dk_list.append(dk_j)
+            dv_list.append(dv_j)
+        dks, dvs = jnp.stack(dk_list), jnp.stack(dv_list)
+    else:
+        kj_static = None
+        _, (dks, dvs) = jax.lax.scan(dkv_block, None,
+                                     (jnp.arange(nk), kb, vb))
+    dk = (dks.transpose(1, 0, 2, 3, 4)
+          .reshape(B, nk * bk_, Kv, D)[:, :T].astype(k.dtype))
+    dv = (dvs.transpose(1, 0, 2, 3, 4)
+          .reshape(B, nk * bk_, Kv, D)[:, :T].astype(v.dtype))
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, bq, bk, q_offset, causal_skip):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, bq, bk, q_offset,
+                             causal_skip)
+    return out
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 512, bk: int = 512,
+                    q_offset: int = 0,
+                    causal_skip: bool = False) -> jnp.ndarray:
+    """Online-softmax chunked attention with a flash-style custom VJP.
+
+    q: (B, S, H, D); k, v: (B, T, Kv, D) with H % Kv == 0 (GQA).
+    Never materializes (S, T) — in either direction: the backward recomputes
+    score blocks from the saved (q, k, v, out, lse), so autodiff does NOT
+    stash per-(q-chunk, kv-chunk) residuals (that would be the full score
+    matrix again, the dominant memory hog in the 4k-seq train dry-run).
+    """
+    return _flash(q, k, v, causal, window, bq, bk, q_offset,
+                  causal_skip)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Single-token attention over a cache.
+
+    q: (B, 1, H, D); caches: (B, L, Kv, D); valid: (B, L) bool slot mask.
+    """
+    B, _, H, D = q.shape
+    Kv = k_cache.shape[2]
+    G = H // Kv
+    qf = q.reshape(B, Kv, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bhgd,blhd->bhgl", qf, k_cache.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# feed-forward: SwiGLU / GELU
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w1, w3, w2):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_ff(x, w1, b1, w2, b2):
+    return jax.nn.gelu(x @ w1 + b1) @ w2 + b2
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts: top-k routing with sort-based capacity dispatch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 64
+    top_k: int = 8
+    capacity_factor: float = 1.25
+    shared_expert: bool = False     # llama4: one always-on shared expert
+
+
+def moe_capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)   # round up to 8 for tiling
+
+
+def moe_ff(x: jnp.ndarray, p: dict, cfg: MoEConfig):
+    """x: (T, d) token-major. Returns (T, d) plus aux losses dict.
+
+    p: router (d, E); w1, w3 (E, d, f); w2 (E, f, d)
+    [+ sw1, sw3, sw2 for the shared expert].
+
+    Dispatch: flatten (token, k) assignments, sort by expert id, keep the
+    first C per expert (capacity drop), run batched expert einsums, scatter
+    back weighted by router prob.  Static shapes throughout; the expert
+    dimension shards over the "model" mesh axis (EP) and the per-expert
+    ff dimension over "data" (FSDP-style 2-D expert sharding).
+    """
+    T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = moe_capacity(T, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, K)                    # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(T * K)
+    flat_p = top_p.reshape(T * K)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+
+    order = jnp.argsort(flat_e)                               # stable
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    # rank of each assignment within its expert
+    start = jnp.searchsorted(se, jnp.arange(E))               # (E,)
+    rank = jnp.arange(T * K) - start[se]
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)              # drop slot
+
+    buf = jnp.zeros((E * C, d), x.dtype)
+    buf = buf.at[slot].set(x[st], mode="drop").reshape(E, C, d)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    h = jax.nn.silu(h) * g
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w2"]).reshape(E * C, d)
+
+    contrib = jnp.where(keep, sp, 0.0).astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype)
+    y = y.at[st].add(eout[jnp.minimum(slot, E * C - 1)] * contrib[:, None],
+                     mode="drop")
+
+    if cfg.shared_expert:
+        y = y + swiglu(x, p["sw1"], p["sw3"], p["sw2"])
+
+    # load-balance aux (Switch-style): E * Σ_e f_e * P_e
+    frac = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * K)
+    mean_p = probs.mean(0)
+    aux = {"lb_loss": E * jnp.sum(frac * mean_p),
+           "drop_frac": 1.0 - keep.mean()}
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective SSM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0        # 0 => d_model // 16
+
+    def inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def rank(self, d_model: int) -> int:
+        return self.dt_rank or max(1, d_model // 16)
+
+
+def _causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, C); w: (K, C) depthwise causal conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):           # K is tiny (4): unrolled adds, no gather
+        out = out + xp[:, i: i + x.shape[1]] * w[i]
+    return out
+
+
+def mamba_scan(decay: jnp.ndarray, inc: jnp.ndarray,
+               h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Linear recurrence h_t = decay_t * h_{t-1} + inc_t over axis 1.
+
+    decay/inc: (B, S, di, n). Associative scan => O(log S) depth.
+    """
+    if h0 is not None:
+        inc = inc.at[:, 0].add(decay[:, 0] * h0)
+
+    def combine(a, b):
+        da, ia = a
+        db, ib = b
+        return da * db, db * ia + ib
+
+    _, h = jax.lax.associative_scan(combine, (decay, inc), axis=1)
+    return h
+
+
+def mamba_mix(x: jnp.ndarray, p: dict, cfg: SSMConfig, d_model: int,
+              state: Optional[dict] = None):
+    """Mamba-1 block. x: (B, S, d). Returns (out, new_state).
+
+    state (decode): {"h": (B, di, n), "conv": (B, K-1, di)}.
+    """
+    B, S, _ = x.shape
+    di = cfg.inner(d_model)
+    n = cfg.d_state
+    r = cfg.rank(d_model)
+
+    xz = x @ p["in_proj"]                         # (B, S, 2di)
+    xin_raw, z = jnp.split(xz, 2, axis=-1)
+
+    if state is not None:
+        conv_in = jnp.concatenate([state["conv"], xin_raw], axis=1)
+        new_conv = conv_in[:, -(cfg.d_conv - 1):]
+        xin = _causal_depthwise_conv(conv_in, p["conv_w"])[:, -S:]
+    else:
+        pad = max(cfg.d_conv - 1 - S, 0)
+        new_conv = jnp.pad(xin_raw, ((0, 0), (pad, 0), (0, 0))
+                           )[:, -(cfg.d_conv - 1):]
+        xin = _causal_depthwise_conv(xin_raw, p["conv_w"])
+    xin = jax.nn.silu(xin + p["conv_b"])
+
+    dbc = xin @ p["x_proj"]                       # (B, S, r + 2n)
+    dt = jax.nn.softplus(dbc[..., :r] @ p["dt_proj"] + p["dt_bias"])
+    Bs = dbc[..., r: r + n].astype(jnp.float32)
+    Cs = dbc[..., r + n:].astype(jnp.float32)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, n)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf[..., None] * A)                       # (B,S,di,n)
+    inc = (dtf * xin.astype(jnp.float32))[..., None] * Bs[:, :, None, :]
+
+    if state is not None and S == 1:
+        h = decay[:, 0] * state["h"] + inc[:, 0]              # (B, di, n)
+        y = (h * Cs[:, 0, None, :]).sum(-1)[:, None]          # (B, 1, di)
+        new_h = h
+    else:
+        h0 = state["h"] if state is not None else None
+        h = mamba_scan(decay, inc, h0)                        # (B,S,di,n)
+        y = (h * Cs[:, :, None, :]).sum(-1)                   # (B, S, di)
+        new_h = h[:, -1]
+
+    y = y.astype(x.dtype) + p["D"] * xin
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"h": new_h, "conv": new_conv}

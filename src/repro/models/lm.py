@@ -1,0 +1,599 @@
+"""Composable LM family covering the 10 assigned architectures.
+
+One decoder stack with per-arch options (GQA, QKV bias, SWA, RoPE/M-RoPE,
+MoE every-layer or alternating, Mamba-1, Hymba-style parallel attn+SSM,
+optional encoder + cross-attention for seamless-m4t), plus the Helix
+quantization hooks (``core.quant.qdense``) on every projection.
+
+Layers are lax.scan-stacked (llama4 scans over [dense, MoE] super-blocks) so
+HLO size — and dry-run compile time on 512 host devices — stays O(1) in
+depth.  Residual activations carry a sequence-parallel sharding constraint
+between blocks (see dist/sharding.py).
+
+Public API:
+  init_lm(key, cfg)                            -> params
+  forward(params, cfg, batch)                  -> logits          (train/eval)
+  lm_loss(params, cfg, batch)                  -> (loss, metrics)
+  prefill(params, cfg, batch, max_len)         -> (logits, cache)
+  decode_step(params, cfg, cache, tokens/embeds) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig, qdense
+from repro.dist.sharding import constrain
+from repro.models.layers import (MoEConfig, SSMConfig, apply_rope,
+                                 decode_attention, flash_attention,
+                                 layer_norm, mamba_mix, moe_ff, rms_norm)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    n_layers: int = 24
+    causal: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: Optional[int] = None
+    # block structure
+    block_pattern: str = "attn"   # attn | moe | mamba | hybrid | alt_dense_moe
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    d_ff_dense: Optional[int] = None    # alt_dense_moe: dense sublayer ff
+    # attention flavour
+    qkv_bias: bool = False
+    window: Optional[int] = None        # sliding-window attention
+    rope_theta: float = 1e6
+    mrope_sections: Optional[Tuple[int, ...]] = None
+    attn_chunk: int = 512
+    # ff / norm flavour
+    ff_type: str = "swiglu"             # swiglu | gelu
+    norm_type: str = "rms"              # rms | ln
+    norm_eps: float = 1e-5
+    # io
+    embed_inputs: bool = True           # False => batch carries "embeds"
+    encoder: Optional[EncoderConfig] = None
+    tie_embeddings: bool = False
+    # numerics / execution
+    dtype: Any = jnp.float32
+    remat: bool = True
+    act_shard: bool = True
+    quant: QuantConfig = QuantConfig()
+    # §Perf knobs (EXPERIMENTS.md): static causal block skipping in flash
+    # attention; python-unrolled layer loop for decode (buffer aliasing)
+    attn_causal_skip: bool = False
+    scan_layers: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to 256 so embedding/head tables shard evenly
+        over the 16-way model axis (hymba's 32001 etc.)."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def n_blocks(self) -> int:
+        return (self.n_layers // 2 if self.block_pattern == "alt_dense_moe"
+                else self.n_layers)
+
+    def param_count(self) -> int:
+        """Analytical parameter count (embeddings included)."""
+        d, hd = self.d_model, self.hd
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * d
+        if self.qkv_bias:
+            attn += hd * (self.n_heads + 2 * self.n_kv_heads)
+        ff_sw = 3 * d * self.d_ff
+        ff_ge = 2 * d * self.d_ff + self.d_ff + d
+        ff = ff_sw if self.ff_type == "swiglu" else ff_ge
+        if self.ssm is not None:
+            di = self.ssm.inner(d)
+            r = self.ssm.rank(d)
+            n = self.ssm.d_state
+            mam = (d * 2 * di + self.ssm.d_conv * di + di +
+                   di * (r + 2 * n) + r * di + di + di * n + di + di * d)
+        else:
+            mam = 0
+        if self.moe is not None:
+            moe = d * self.moe.n_experts + 3 * self.moe.n_experts * d * self.d_ff
+            if self.moe.shared_expert:
+                moe += 3 * d * self.d_ff
+        else:
+            moe = 0
+        nw = d * (2 if self.norm_type == "ln" else 1)   # one norm's params
+        per, norms = {
+            "attn": (attn + ff, 2 * nw),
+            "moe": (attn + moe, 2 * nw),
+            "mamba": (mam, nw),
+            "hybrid": (attn + ff + mam, 2 * nw),
+            "alt_dense_moe": (attn + 3 * d * (self.d_ff_dense or self.d_ff)
+                              + attn + moe, 4 * nw),
+        }[self.block_pattern]
+        if self.encoder is not None:
+            norms += nw                                  # lnx (cross-attn)
+        total = (per + norms) * self.n_blocks + nw       # + final_norm
+        if self.embed_inputs or self.encoder is not None:
+            total += self.padded_vocab * d      # embed
+        if not self.tie_embeddings:
+            total += d * self.padded_vocab      # head
+        if self.encoder is not None:
+            total += self.encoder.n_layers * (attn + ff + 2 * nw) + nw \
+                + self.n_layers * attn          # encoder + dec cross-attn
+        return total
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        moe_total = 3 * self.moe.n_experts * self.d_model * self.d_ff
+        moe_active = 3 * self.moe.top_k * self.d_model * self.d_ff
+        n_moe_layers = (self.n_blocks if self.block_pattern != "alt_dense_moe"
+                        else self.n_blocks)
+        return full - n_moe_layers * (moe_total - moe_active)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_params(cfg, key):
+    if cfg.norm_type == "rms":
+        return {"w": jnp.ones((cfg.d_model,), cfg.dtype)}
+    return {"w": jnp.ones((cfg.d_model,), cfg.dtype),
+            "b": jnp.zeros((cfg.d_model,), cfg.dtype)}
+
+
+def _init(key, shape, cfg, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(
+        cfg.dtype)
+
+
+def _attn_params(key, cfg: LMConfig):
+    k = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    p = {"wq": _init(k[0], (d, cfg.n_heads * hd), cfg),
+         "wk": _init(k[1], (d, cfg.n_kv_heads * hd), cfg),
+         "wv": _init(k[2], (d, cfg.n_kv_heads * hd), cfg),
+         "wo": _init(k[3], (cfg.n_heads * hd, d), cfg)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.dtype)
+    return p
+
+
+def _ff_params(key, cfg: LMConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    k = jax.random.split(key, 3)
+    d = cfg.d_model
+    if cfg.ff_type == "swiglu":
+        return {"w1": _init(k[0], (d, d_ff), cfg),
+                "w3": _init(k[1], (d, d_ff), cfg),
+                "w2": _init(k[2], (d_ff, d), cfg)}
+    return {"w1": _init(k[0], (d, d_ff), cfg),
+            "b1": jnp.zeros((d_ff,), cfg.dtype),
+            "w2": _init(k[1], (d_ff, d), cfg),
+            "b2": jnp.zeros((d,), cfg.dtype)}
+
+
+def _moe_params(key, cfg: LMConfig):
+    assert cfg.moe is not None
+    k = jax.random.split(key, 7)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    p = {"router": _init(k[0], (d, E), cfg),
+         "w1": _init(k[1], (E, d, f), cfg),
+         "w3": _init(k[2], (E, d, f), cfg),
+         "w2": _init(k[3], (E, f, d), cfg)}
+    if cfg.moe.shared_expert:
+        p.update({"sw1": _init(k[4], (d, f), cfg),
+                  "sw3": _init(k[5], (d, f), cfg),
+                  "sw2": _init(k[6], (f, d), cfg)})
+    return p
+
+
+def _mamba_params(key, cfg: LMConfig):
+    assert cfg.ssm is not None
+    s = cfg.ssm
+    d = cfg.d_model
+    di, r, n = s.inner(d), s.rank(d), s.d_state
+    k = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": _init(k[0], (d, 2 * di), cfg),
+        "conv_w": _init(k[1], (s.d_conv, di), cfg, scale=0.1),
+        "conv_b": jnp.zeros((di,), cfg.dtype),
+        "x_proj": _init(k[2], (di, r + 2 * n), cfg),
+        "dt_proj": _init(k[3], (r, di), cfg),
+        "dt_bias": jnp.full((di,), -4.0, cfg.dtype),  # softplus ~ small dt
+        "A_log": jnp.log(A).astype(cfg.dtype),
+        "D": jnp.ones((di,), cfg.dtype),
+        "out_proj": _init(k[4], (di, d), cfg),
+    }
+
+
+def _block_params(key, cfg: LMConfig, kind: str):
+    ks = jax.random.split(key, 8)
+    if kind == "attn":
+        return {"ln1": _norm_params(cfg, ks[0]),
+                "attn": _attn_params(ks[1], cfg),
+                "ln2": _norm_params(cfg, ks[2]),
+                "mlp": _ff_params(ks[3], cfg)}
+    if kind == "moe":
+        return {"ln1": _norm_params(cfg, ks[0]),
+                "attn": _attn_params(ks[1], cfg),
+                "ln2": _norm_params(cfg, ks[2]),
+                "moe": _moe_params(ks[3], cfg)}
+    if kind == "mamba":
+        return {"ln1": _norm_params(cfg, ks[0]),
+                "mamba": _mamba_params(ks[1], cfg)}
+    if kind == "hybrid":
+        return {"ln1": _norm_params(cfg, ks[0]),
+                "attn": _attn_params(ks[1], cfg),
+                "mamba": _mamba_params(ks[2], cfg),
+                "ln2": _norm_params(cfg, ks[3]),
+                "mlp": _ff_params(ks[4], cfg)}
+    if kind == "alt_dense_moe":
+        return {"ln1a": _norm_params(cfg, ks[0]),
+                "attn_a": _attn_params(ks[1], cfg),
+                "ln2a": _norm_params(cfg, ks[2]),
+                "mlp": _ff_params(ks[3], cfg, cfg.d_ff_dense),
+                "ln1b": _norm_params(cfg, ks[4]),
+                "attn_b": _attn_params(ks[5], cfg),
+                "ln2b": _norm_params(cfg, ks[6]),
+                "moe": _moe_params(ks[7], cfg)}
+    if kind == "encdec":   # decoder block with cross-attention
+        return {"ln1": _norm_params(cfg, ks[0]),
+                "attn": _attn_params(ks[1], cfg),
+                "lnx": _norm_params(cfg, ks[2]),
+                "xattn": _attn_params(ks[3], cfg),
+                "ln2": _norm_params(cfg, ks[4]),
+                "mlp": _ff_params(ks[5], cfg)}
+    raise ValueError(kind)
+
+
+def _decoder_kind(cfg: LMConfig) -> str:
+    if cfg.encoder is not None:
+        return "encdec"
+    return cfg.block_pattern
+
+
+def init_lm(key, cfg: LMConfig):
+    keys = jax.random.split(key, 6)
+    params: dict = {}
+    if cfg.embed_inputs or cfg.encoder is not None:
+        params["embed"] = _init(keys[0], (cfg.padded_vocab, cfg.d_model),
+                                cfg)
+    kind = _decoder_kind(cfg)
+    bkeys = jax.random.split(keys[1], cfg.n_blocks)
+    params["blocks"] = jax.vmap(
+        lambda k: _block_params(k, cfg, kind))(bkeys)
+    params["final_norm"] = _norm_params(cfg, keys[2])
+    if not cfg.tie_embeddings:
+        params["head"] = _init(keys[3], (cfg.d_model, cfg.padded_vocab),
+                               cfg)
+    if cfg.encoder is not None:
+        ekeys = jax.random.split(keys[4], cfg.encoder.n_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _block_params(k, cfg, "attn"))(ekeys)
+        params["enc_norm"] = _norm_params(cfg, keys[5])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def _norm(x, p, cfg):
+    if cfg.norm_type == "rms":
+        return rms_norm(x, p["w"], cfg.norm_eps)
+    return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+
+
+def _qkv(x, p, cfg: LMConfig, positions):
+    B, S, _ = x.shape
+    q = qdense(x, p["wq"], cfg.quant, p.get("bq"))
+    k = qdense(x, p["wk"], cfg.quant, p.get("bk"))
+    v = qdense(x, p["wv"], cfg.quant, p.get("bv"))
+    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def _self_attn(x, p, cfg: LMConfig, positions, causal=True):
+    B, S, _ = x.shape
+    q, k, v = _qkv(x, p, cfg, positions)
+    out = flash_attention(q, k, v, causal=causal, window=cfg.window,
+                          bq=cfg.attn_chunk, bk=cfg.attn_chunk,
+                          causal_skip=cfg.attn_causal_skip and causal)
+    return qdense(out.reshape(B, S, -1), p["wo"], cfg.quant)
+
+
+def _cross_attn(x, p, cfg: LMConfig, enc_kv):
+    B, S, _ = x.shape
+    q = qdense(x, p["wq"], cfg.quant).reshape(B, S, cfg.n_heads, cfg.hd)
+    k, v = enc_kv
+    out = flash_attention(q, k, v, causal=False, window=None,
+                          bq=cfg.attn_chunk, bk=cfg.attn_chunk)
+    return qdense(out.reshape(B, S, -1), p["wo"], cfg.quant)
+
+
+def _mlp(x, p, cfg: LMConfig, d_ff=None):
+    if cfg.ff_type == "swiglu":
+        h = jax.nn.silu(qdense(x, p["w1"], cfg.quant)) * qdense(
+            x, p["w3"], cfg.quant)
+        return qdense(h, p["w2"], cfg.quant)
+    h = jax.nn.gelu(qdense(x, p["w1"], cfg.quant, p["b1"]))
+    return qdense(h, p["w2"], cfg.quant, p["b2"])
+
+
+def _moe_apply(x, p, cfg: LMConfig):
+    """MoE with DATA-LOCAL dispatch under a mesh.
+
+    Routing/sort/scatter run per data shard via shard_map (partial-manual:
+    the "model" axis stays auto so expert weights keep their EP sharding
+    inside). A global dispatch makes GSPMD replicate the token sort and the
+    (E*C, d) buffers on every device — 400+ GiB/device at 1M tokens.
+    """
+    from repro.dist import sharding as shd
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    mesh = shd.get_mesh()
+    dp = tuple(a for a in ("pod", "data") if
+               (mesh is not None and a in mesh.axis_names))
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    if mesh is None or n_dp <= 1 or T % n_dp != 0 or T < 2 * n_dp:
+        y, aux = moe_ff(xt, p, cfg.moe)
+        return y.reshape(B, S, d), aux
+
+    def local(xt_l, p_l):
+        # token activations cross the boundary in bf16 (saved per layer as
+        # scan residuals — f32 would double multi-GiB stacks); f32 compute
+        # starts inside.
+        y, aux = moe_ff(xt_l.astype(jnp.float32), p_l, cfg.moe)
+        aux = {k: jax.lax.pmean(v, dp) for k, v in aux.items()}
+        return y.astype(xt.dtype), aux
+
+    # expert WEIGHTS must enter the manual region already f32: XLA 0.8's
+    # CPU backend CHECK-fails ("invalid binary instruction opcode copy") on
+    # the backward of bf16 weight tensors crossing a partial-manual
+    # shard_map boundary. (The fsdp all-gather across "data" therefore
+    # moves f32 — a known 2x on that link, revisit when the XLA bug dies.)
+    p32 = jax.tree_util.tree_map(lambda w: w.astype(jnp.float32), p)
+    y, aux = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, None), P()),
+        out_specs=(P(dp, None), P()),
+        axis_names=set(dp), check_vma=False)(xt, p32)
+    return y.reshape(B, S, d), aux
+
+
+def _block(x, bp, cfg: LMConfig, positions, enc_kv=None):
+    """One decoder block in train/prefill mode. Returns (x, aux)."""
+    kind = _decoder_kind(cfg)
+    aux = {}
+    if kind == "attn":
+        x = x + _self_attn(_norm(x, bp["ln1"], cfg), bp["attn"], cfg,
+                           positions)
+        x = x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+    elif kind == "moe":
+        x = x + _self_attn(_norm(x, bp["ln1"], cfg), bp["attn"], cfg,
+                           positions)
+        y, aux = _moe_apply(_norm(x, bp["ln2"], cfg), bp["moe"], cfg)
+        x = x + y
+    elif kind == "mamba":
+        y, _ = mamba_mix(_norm(x, bp["ln1"], cfg), bp["mamba"], cfg.ssm,
+                         cfg.d_model)
+        x = x + y
+    elif kind == "hybrid":
+        h = _norm(x, bp["ln1"], cfg)
+        att = _self_attn(h, bp["attn"], cfg, positions)
+        ssm, _ = mamba_mix(h, bp["mamba"], cfg.ssm, cfg.d_model)
+        x = x + 0.5 * (att + ssm)
+        x = x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+    elif kind == "alt_dense_moe":
+        x = x + _self_attn(_norm(x, bp["ln1a"], cfg), bp["attn_a"], cfg,
+                           positions)
+        x = x + _mlp(_norm(x, bp["ln2a"], cfg), bp["mlp"], cfg,
+                     cfg.d_ff_dense)
+        x = x + _self_attn(_norm(x, bp["ln1b"], cfg), bp["attn_b"], cfg,
+                           positions)
+        y, aux = _moe_apply(_norm(x, bp["ln2b"], cfg), bp["moe"], cfg)
+        x = x + y
+    elif kind == "encdec":
+        x = x + _self_attn(_norm(x, bp["ln1"], cfg), bp["attn"], cfg,
+                           positions)
+        x = x + _cross_attn(_norm(x, bp["lnx"], cfg), bp["xattn"], cfg,
+                            enc_kv)
+        x = x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.act_shard:
+        x = constrain(x, ("dp", "tp", None))
+    return x, aux
+
+
+def _positions(cfg: LMConfig, B: int, S: int, offset=0):
+    """offset: scalar or per-batch (B,) int32 (per-slot decode positions)."""
+    offset = jnp.asarray(offset, jnp.int32)
+    if offset.ndim == 1:
+        pos = jnp.arange(S, dtype=jnp.int32)[None] + offset[:, None]
+    else:
+        pos = jnp.arange(S, dtype=jnp.int32)[None] + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None],
+                               (B, S, len(cfg.mrope_sections)))
+    return pos
+
+
+def _run_encoder(params, cfg: LMConfig, enc_embeds):
+    """Encoder stack over precomputed frontend embeddings (B, S_enc, d)."""
+    x = enc_embeds.astype(cfg.dtype)
+    B, S, _ = x.shape
+    pos = _positions(cfg, B, S)
+
+    def body(x, bp):
+        x = x + _self_attn(_norm(x, bp["ln1"], cfg), bp["attn"], cfg, pos,
+                           causal=False)
+        x = x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+        if cfg.act_shard:
+            x = constrain(x, ("dp", "tp", None))
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+    return _norm(x, params["enc_norm"], cfg)
+
+
+def _enc_kv(params_block, cfg, enc_out):
+    """Precompute cross-attention K/V once per decode session / fwd pass."""
+    B, S, _ = enc_out.shape
+    k = qdense(enc_out, params_block["wk"], cfg.quant).reshape(
+        B, S, cfg.n_kv_heads, cfg.hd)
+    v = qdense(enc_out, params_block["wv"], cfg.quant).reshape(
+        B, S, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def embed_lookup(embed: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Embedding lookup.
+
+    Untied tables are d-sharded (dist/sharding.py): the backward scatter-add
+    then touches only the local d-slice and stays fully sharded.  (A
+    vocab-sharded table's scatter gradient gets replicated by GSPMD —
+    multi-GiB f32 (V, d) buffers; only the tied-embedding archs keep the
+    vocab layout, where the table doubles as the CE head.)
+    """
+    return embed[tokens]
+
+
+def forward_hidden(params, cfg: LMConfig, batch):
+    """Backbone -> final-norm hidden states (B, S, d) + aux.
+
+    batch: {"tokens": (B,S)} and/or {"embeds": (B,S,d)};
+    enc-dec additionally {"enc_embeds": (B,S_enc,d)}.
+    """
+    if cfg.embed_inputs:
+        x = embed_lookup(params["embed"], batch["tokens"]).astype(cfg.dtype)
+    else:
+        x = batch["embeds"].astype(cfg.dtype)
+    B, S, _ = x.shape
+    pos = _positions(cfg, B, S)
+    if cfg.act_shard:
+        x = constrain(x, ("dp", "tp", None))
+
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _run_encoder(params, cfg, batch["enc_embeds"])
+
+    def body(x, bp):
+        if cfg.encoder is not None:
+            ekv = _enc_kv(bp["xattn"], cfg, enc_out)
+            x, aux = _block(x, bp, cfg, pos, enc_kv=ekv)
+        else:
+            x, aux = _block(x, bp, cfg, pos)
+        lb = aux.get("lb_loss", jnp.zeros((), jnp.float32))
+        return x, lb
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, lbs = jax.lax.scan(fn, x, params["blocks"])
+    x = _norm(x, params["final_norm"], cfg)
+    return x, {"lb_loss": lbs.mean() if cfg.n_blocks else 0.0}
+
+
+def _head(params, cfg: LMConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+def forward(params, cfg: LMConfig, batch):
+    """Eval forward -> full logits (B, S, padded_vocab). For small models /
+    tests; the training path uses the chunked CE below and never
+    materializes (B, S, V)."""
+    x, aux = forward_hidden(params, cfg, batch)
+    logits = qdense(x, _head(params, cfg), cfg.quant)
+    if cfg.act_shard:
+        logits = constrain(logits, ("dp", None, "tp"))
+    return logits, aux
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token CE in f32; vocab axis may be sharded (psum'd LSE)."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(-1, keepdims=True))
+    lse = jnp.log(jnp.exp(lf - m).sum(-1, keepdims=True)) + m
+    V = lf.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+              == targets[..., None])
+    gold = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1, keepdims=True)
+    return (lse - gold).mean()
+
+
+def chunked_cross_entropy(hidden, head, targets, cfg: LMConfig,
+                          chunk: int = 512) -> jnp.ndarray:
+    """CE without materializing (B, S, V): scan over sequence chunks, the
+    (B, chunk, V) logits live only inside a rematerialized scan body.
+
+    The gold logit is extracted with an iota-compare masked reduce (never a
+    gather) so the vocab axis stays sharded end to end.
+    """
+    B, S, d = hidden.shape
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    Sp = hidden.shape[1]
+    n = Sp // chunk
+    hc = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    valid = (jnp.arange(Sp) < S).reshape(n, 1, chunk)
+
+    def body(carry, xs):
+        h, t, ok = xs
+        lf = qdense(h, head, cfg.quant).astype(jnp.float32)
+        m = jax.lax.stop_gradient(lf.max(-1))
+        lse = jnp.log(jnp.exp(lf - m[..., None]).sum(-1)) + m
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+                  == t[..., None])
+        gold = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+        return carry + jnp.sum(jnp.where(ok, lse - gold, 0.0)), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    total, _ = jax.lax.scan(fn, jnp.zeros((), jnp.float32), (hc, tc, valid))
+    return total / (B * S)
+
+
+def lm_loss(params, cfg: LMConfig, batch):
+    """Next-token LM loss. batch needs "labels" (B, S) (== tokens for LM)."""
+    hidden, aux = forward_hidden(params, cfg, batch)
+    labels = batch.get("labels", batch.get("tokens"))
+    loss = chunked_cross_entropy(hidden[:, :-1], _head(params, cfg),
+                                 labels[:, 1:], cfg)
+    if cfg.moe is not None:
+        loss = loss + 0.01 * aux["lb_loss"]
+    return loss, {"ce": loss, **aux}

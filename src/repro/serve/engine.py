@@ -1,0 +1,120 @@
+"""Batched LM serving engine with continuous batching.
+
+A fixed pool of B slots shares one jitted ``decode_step``; requests are
+admitted into free slots and their prompt is folded in with a per-lane
+``active`` mask (all other lanes are frozen: no KV write, no position
+advance — see models/decode.py), every ``step()`` decodes one token for all
+active slots, and finished requests (EOS / max_tokens) retire immediately
+so their slot is reusable — the batch never drains to refill.
+
+This is iteration-level scheduling (Orca-style) on a cache whose per-slot
+positions make lanes fully independent; launch/specs.py's ``decode`` cells
+lower exactly one engine step on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode as decode_lib
+from repro.models import lm as lm_lib
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (P,) int32
+    max_tokens: int = 32
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: lm_lib.LMConfig, batch_slots: int = 8,
+                 max_len: int = 256):
+        assert cfg.embed_inputs, "engine serves token models"
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_len = max_len
+        self.cache = decode_lib.init_cache(cfg, batch_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self.last_token = np.zeros((batch_slots,), np.int32)
+        self.steps = 0
+
+        def one_step(params, cache, tokens, active):
+            logits, cache = decode_lib.decode_step(params, cfg, cache,
+                                                   tokens=tokens,
+                                                   active=active)
+            nxt = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1)
+            return nxt.astype(jnp.int32), cache
+
+        self._decode = jax.jit(one_step, donate_argnums=(1,))
+
+        def reset_slot(cache, slot):
+            """Zero one lane's position (its stale KV is masked by pos)."""
+            return {"blocks": cache["blocks"],
+                    "pos": cache["pos"].at[slot].set(0)}
+
+        self._reset_slot = jax.jit(reset_slot, donate_argnums=(0,))
+
+    # -- admission -------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit_one(self, slot: int, req: Request):
+        """Fold the prompt into `slot` while other lanes stay frozen."""
+        self.cache = self._reset_slot(self.cache, slot)
+        active = np.zeros((self.B,), bool)
+        active[slot] = True
+        for t in req.prompt[:-1]:
+            toks = np.array(self.last_token)
+            toks[slot] = int(t)
+            _, self.cache = self._decode(self.params, self.cache,
+                                         jnp.asarray(toks),
+                                         jnp.asarray(active))
+        self.last_token[slot] = int(req.prompt[-1])
+        self.slot_req[slot] = req
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.slot_req[slot] is None and self.queue:
+                self._admit_one(slot, self.queue.pop(0))
+
+    # -- decoding --------------------------------------------------------------
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([r is not None for r in self.slot_req])
+
+    def step(self):
+        active = self.active_mask()
+        nxt, self.cache = self._decode(self.params, self.cache,
+                                       jnp.asarray(self.last_token),
+                                       jnp.asarray(active))
+        nxt = np.asarray(nxt)
+        self.steps += 1
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            self.last_token[slot] = tok
+            if ((req.eos_id is not None and tok == req.eos_id)
+                    or len(req.out_tokens) >= req.max_tokens):
+                req.done = True
+                self.finished[req.rid] = req
+                self.slot_req[slot] = None
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        while (self.queue or any(self.active_mask())) and max_steps > 0:
+            self._admit()
+            if any(self.active_mask()):
+                self.step()
+            max_steps -= 1
+        return self.finished

@@ -1,0 +1,143 @@
+"""Fault tolerance & straggler mitigation for long-running training jobs.
+
+Three cooperating pieces, all host-side (they wrap — never enter — the jitted
+step, so they add zero compile-graph cost):
+
+* ``Heartbeat``          — liveness registry. On a real cluster each host
+                           posts a heartbeat per step to shared storage; the
+                           coordinator declares a host dead after ``timeout``
+                           and triggers an elastic restart (fewer pods) from
+                           the last checkpoint.  Simulated in-process here,
+                           with the same API.
+* ``StragglerDetector``  — EWMA of step wall-times + z-score flagging.
+                           On TPU pods stragglers are usually a host issue
+                           (input starvation, ECC retries); mitigation =
+                           recompile-free data re-balancing or host eviction.
+* ``run_resilient``      — supervisor loop: run -> crash -> restore latest
+                           checkpoint -> resume, up to ``max_restarts``.
+                           Determinism contract: data is generated per global
+                           step (``data.genome.batch_for_step``), so a
+                           restarted run replays the identical batch stream
+                           and loss curves are bit-reproducible.
+"""
+from __future__ import annotations
+
+import collections
+import math
+import time
+from typing import Callable, Dict, Optional
+
+
+class Heartbeat:
+    def __init__(self, timeout_s: float = 30.0, clock=time.monotonic):
+        self.timeout_s = timeout_s
+        self._clock = clock
+        self._last: Dict[str, float] = {}
+
+    def beat(self, worker: str, now: Optional[float] = None):
+        self._last[worker] = self._clock() if now is None else now
+
+    def alive(self, worker: str, now: Optional[float] = None) -> bool:
+        if worker not in self._last:
+            return False
+        now = self._clock() if now is None else now
+        return (now - self._last[worker]) <= self.timeout_s
+
+    def dead_workers(self, now: Optional[float] = None):
+        now = self._clock() if now is None else now
+        return sorted(w for w, t in self._last.items()
+                      if now - t > self.timeout_s)
+
+    def quorum(self, expected: int, now: Optional[float] = None) -> bool:
+        now = self._clock() if now is None else now
+        live = sum(1 for t in self._last.values()
+                   if now - t <= self.timeout_s)
+        return live >= expected
+
+
+class StragglerDetector:
+    """Flags steps (or workers) whose duration is a z-score outlier."""
+
+    def __init__(self, alpha: float = 0.1, z_threshold: float = 3.0,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.z = z_threshold
+        self.warmup = warmup
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+
+    def observe(self, duration_s: float) -> bool:
+        """Returns True if this observation is a straggler."""
+        self.n += 1
+        if self.n <= self.warmup:
+            # prime the EWMA
+            d = duration_s - self.mean
+            self.mean += d / self.n
+            self.var += d * (duration_s - self.mean)
+            return False
+        std = math.sqrt(max(self.var / max(self.n - 1, 1), 1e-12))
+        is_straggler = duration_s > self.mean + self.z * std
+        if not is_straggler:  # don't poison stats with outliers
+            self.mean = (1 - self.alpha) * self.mean + self.alpha * duration_s
+            self.var = ((1 - self.alpha) * self.var +
+                        self.alpha * (duration_s - self.mean) ** 2 *
+                        max(self.n - 1, 1))
+        return is_straggler
+
+
+class FaultInjector:
+    """Deterministic fault injection for tests: raise at given steps, once."""
+
+    def __init__(self, fail_at=()):
+        self.fail_at = set(fail_at)
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+def run_resilient(
+    run_from: Callable[[int], int],
+    restore_step: Callable[[], int],
+    max_restarts: int = 3,
+    on_restart: Optional[Callable[[int, BaseException], None]] = None,
+) -> int:
+    """Supervise ``run_from(start_step) -> final_step`` with restarts.
+
+    ``restore_step()`` re-loads the latest checkpoint into the caller's state
+    and returns the step to resume from (0 if none).
+    """
+    restarts = 0
+    while True:
+        start = restore_step()
+        try:
+            return run_from(start)
+        except Exception as e:  # noqa: BLE001 — supervisor must catch all
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(restarts, e)
+
+
+class StepTimer:
+    """Context manager collecting step durations for the detector."""
+
+    def __init__(self):
+        self.durations = collections.deque(maxlen=1000)
+        self._t0 = None
+
+    def __enter__(self):
+        self._t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc):
+        self.durations.append(time.monotonic() - self._t0)
+        return False
+
+    @property
+    def last(self):
+        return self.durations[-1] if self.durations else float("nan")

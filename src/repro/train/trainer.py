@@ -1,0 +1,145 @@
+"""Generic training loop: jitted step, grad accumulation, checkpoints, FT.
+
+The trainer is model-agnostic: it owns (loss_fn, optimizer, data_fn) and
+wires in the production concerns — deterministic per-step data (restart
+replay), periodic async checkpoints, straggler detection, heartbeats, and a
+resilient supervisor (``run_resilient``).  The same class drives the SEAT
+base-caller reproduction (examples/train_seat.py) and the LM smoke drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ckpt_lib
+from repro.train import fault as fault_lib
+from repro.train.optimizer import AdamW
+
+log = logging.getLogger("repro.trainer")
+
+LossFn = Callable[[Any, Dict[str, jnp.ndarray]], Tuple[jnp.ndarray, Dict]]
+DataFn = Callable[[int], Dict[str, jnp.ndarray]]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0          # 0 => no checkpoints
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    grad_accum: int = 1
+    heartbeat_timeout_s: float = 60.0
+    worker: str = "worker0"
+
+
+def make_train_step(loss_fn: LossFn, opt: AdamW, grad_accum: int = 1,
+                    donate: bool = True):
+    """Build the jitted (params, opt_state, batch) -> (params, state, metrics).
+
+    grad_accum > 1 splits the leading batch dim into microbatches and
+    accumulates grads with a lax.scan — constant memory in #microbatches.
+    """
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return grads, metrics
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                g, m = grads_of(params, mb)
+                acc_g = jax.tree_util.tree_map(jnp.add, acc, g)
+                return acc_g, m
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(body, zero, micro)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+class Trainer:
+    def __init__(self, loss_fn: LossFn, data_fn: DataFn, params,
+                 opt: AdamW, cfg: TrainerConfig):
+        self.cfg = cfg
+        self.opt = opt
+        self.data_fn = data_fn
+        self.params = params
+        self.opt_state = opt.init(params)
+        self._step_fn = make_train_step(loss_fn, opt, cfg.grad_accum)
+        self.heartbeat = fault_lib.Heartbeat(cfg.heartbeat_timeout_s)
+        self.straggler = fault_lib.StragglerDetector()
+        self.history: list = []
+        self.fault_injector: Optional[fault_lib.FaultInjector] = None
+
+    # -- checkpoint plumbing -------------------------------------------------
+    def _state_tree(self):
+        return {"params": self.params, "opt": self.opt_state}
+
+    def save(self, step: int):
+        tree = self._state_tree()
+        if self.cfg.ckpt_async:
+            ckpt_lib.save_async(self.cfg.ckpt_dir, step, tree,
+                                keep=self.cfg.ckpt_keep)
+        else:
+            ckpt_lib.save(self.cfg.ckpt_dir, step, tree,
+                          keep=self.cfg.ckpt_keep)
+
+    def restore_latest(self) -> int:
+        """Returns the step to resume from (0 when no checkpoint exists)."""
+        latest = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        if latest is None:
+            return 0
+        tree, step = ckpt_lib.restore(self.cfg.ckpt_dir, self._state_tree())
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        log.info("restored checkpoint at step %d", step)
+        return step + 1
+
+    # -- main loop -------------------------------------------------------------
+    def run_from(self, start_step: int) -> int:
+        cfg = self.cfg
+        for step in range(start_step, cfg.steps):
+            if self.fault_injector is not None:
+                self.fault_injector.maybe_fail(step)
+            t0 = time.monotonic()
+            batch = self.data_fn(step)
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch)
+            dur = time.monotonic() - t0
+            self.heartbeat.beat(cfg.worker)
+            if self.straggler.observe(dur):
+                log.warning("straggler step %d: %.3fs", step, dur)
+            if cfg.log_every and step % cfg.log_every == 0:
+                loss = float(metrics["loss"])
+                self.history.append((step, loss))
+                log.info("step %d loss %.4f (%.2fs)", step, loss, dur)
+            if cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:
+                self.save(step)
+        ckpt_lib.wait_pending()
+        return cfg.steps
+
+    def run(self, max_restarts: int = 3) -> int:
+        """Resilient entry point: crash -> restore -> resume."""
+        return fault_lib.run_resilient(
+            self.run_from, self.restore_latest, max_restarts=max_restarts,
+            on_restart=lambda n, e: log.warning("restart %d after %r", n, e))

@@ -1,0 +1,206 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracles,
+swept over shapes/dtypes (the kernels target TPU; interpret=True executes
+the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import voting
+from repro.kernels.ctc_merge.ops import masked_logsumexp
+from repro.kernels.ctc_merge.ref import ctc_merge_ref
+from repro.kernels.gru_cell.ops import gru_cell
+from repro.kernels.gru_cell.ref import gru_cell_ref
+from repro.kernels.quant_matmul.ops import qmm_from_float, quant_matmul
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.kernels.vote_cmp.ops import best_match, mismatch_bits
+from repro.kernels.vote_cmp.ref import (mismatch_matrix_ref, substring_bits,
+                                        vote_cmp_ref)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N", [
+    (128, 128, 128),          # exactly one MXU tile
+    (256, 384, 128),          # multi-tile K loop
+    (64, 100, 33),            # ragged: exercises padding
+    (1, 128, 256),            # single row (decode shape)
+])
+def test_quant_matmul_vs_ref(M, K, N):
+    rng = np.random.default_rng(M + K + N)
+    xq = jnp.asarray(rng.integers(-15, 16, (M, K)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-15, 16, (K, N)), jnp.int8)
+    sx = jnp.asarray([[0.017]], jnp.float32)
+    sw = jnp.asarray(rng.random((1, N)).astype(np.float32) * 0.05 + 1e-3)
+    got = quant_matmul(xq, wq, sx, sw)
+    want = quant_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [4, 5, 8])
+def test_qmm_float_path_accuracy_scales_with_bits(bits):
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.standard_normal((32, 128)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32))
+    y = qmm_from_float(x, w, bits=bits)
+    ref = x @ w
+    rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+    assert rel < {4: 0.3, 5: 0.12, 8: 0.01}[bits]
+
+
+def test_quant_matmul_int8_extremes():
+    """Full-range int8 codes must not overflow the int32 accumulator."""
+    K = 512
+    xq = jnp.full((8, K), 127, jnp.int8)
+    wq = jnp.full((K, 8), -127, jnp.int8)
+    got = quant_matmul(xq, wq, jnp.ones((1, 1)), jnp.ones((1, 8)))
+    np.testing.assert_allclose(np.asarray(got), 127 * -127 * K)
+
+
+# ---------------------------------------------------------------------------
+# vote_cmp
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L1,L2,K", [(40, 40, 8), (100, 64, 16), (33, 57, 5)])
+def test_vote_cmp_vs_refs(L1, L2, K):
+    rng = np.random.default_rng(L1 + L2 + K)
+    r1 = jnp.asarray(rng.integers(0, 4, L1), jnp.int32)
+    r2 = jnp.asarray(rng.integers(0, 4, L2), jnp.int32)
+    got = mismatch_bits(r1, r2, K)
+    want_bits = vote_cmp_ref(substring_bits(r1, K), substring_bits(r2, K))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_bits))
+    # zero bit-mismatch <=> zero symbol-mismatch (encoding is injective)
+    sym = mismatch_matrix_ref(r1, r2, K)
+    np.testing.assert_array_equal(np.asarray(got == 0), np.asarray(sym == 0))
+
+
+def test_vote_cmp_finds_planted_match():
+    rng = np.random.default_rng(3)
+    K = 12
+    probe = jnp.asarray(rng.integers(0, 4, K), jnp.int32)
+    r1 = jnp.concatenate([jnp.asarray(rng.integers(0, 4, 20), jnp.int32),
+                          probe,
+                          jnp.asarray(rng.integers(0, 4, 8), jnp.int32)])
+    r2 = jnp.concatenate([jnp.asarray(rng.integers(0, 4, 5), jnp.int32),
+                          probe,
+                          jnp.asarray(rng.integers(0, 4, 30), jnp.int32)])
+    i, j, found = best_match(r1, r2, K)
+    assert bool(found)
+    np.testing.assert_array_equal(np.asarray(r1[int(i):int(i) + K]),
+                                  np.asarray(r2[int(j):int(j) + K]))
+
+
+# ---------------------------------------------------------------------------
+# ctc_merge
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,C", [(2, 128), (4, 50), (1, 300)])
+def test_ctc_merge_vs_ref(B, C):
+    rng = np.random.default_rng(B * C)
+    eq = rng.integers(0, 2, (B, C, C)).astype(np.int8)
+    eq = np.maximum(eq, np.eye(C, dtype=np.int8)[None])   # self-connected
+    scores = rng.standard_normal((B, C)).astype(np.float32) * 5
+    got = masked_logsumexp(jnp.asarray(eq), jnp.asarray(scores))
+    want = ctc_merge_ref(jnp.asarray(eq), jnp.asarray(scores))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ctc_merge_paper_fig18():
+    """p(A) = p(A A)+p(A -)+p(- A)+p(- -... merge of 4 collapsing candidates."""
+    # candidates: [AA, A-, -A, --]; first three collapse to "A"
+    p = np.log(np.asarray([[0.09, 0.15, 0.12, 0.2]], np.float32))
+    eq = np.zeros((1, 4, 4), np.int8)
+    eq[0, :3, :3] = 1       # AA ~ A- ~ -A
+    eq[0, 3, 3] = 1         # -- alone
+    merged = masked_logsumexp(jnp.asarray(eq), jnp.asarray(p))
+    np.testing.assert_allclose(float(jnp.exp(merged[0, 0])), 0.36, atol=1e-6)
+    np.testing.assert_allclose(float(jnp.exp(merged[0, 3])), 0.2, atol=1e-6)
+
+
+def test_ctc_merge_identity_mask_is_noop():
+    scores = jnp.asarray(np.random.default_rng(0)
+                         .standard_normal((3, 64)).astype(np.float32))
+    eq = jnp.broadcast_to(jnp.eye(64, dtype=jnp.int8), (3, 64, 64))
+    out = masked_logsumexp(eq, scores)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(scores),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gru_cell
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H", [(128, 96), (64, 128), (7, 96), (256, 64)])
+def test_gru_cell_vs_ref(B, H):
+    rng = np.random.default_rng(B + H)
+    xp = jnp.asarray(rng.standard_normal((B, 3 * H)).astype(np.float32))
+    h = jnp.asarray(rng.standard_normal((B, H)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((H, 3 * H)).astype(np.float32) * 0.1)
+    b = jnp.asarray(rng.standard_normal((3 * H,)).astype(np.float32) * 0.1)
+    got = gru_cell(xp, h, u, b)
+    want = gru_cell_ref(xp, h, u, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gru_cell_matches_model_cell():
+    """Kernel == the cell used inside models.basecaller (same math)."""
+    from repro.core.quant import QuantConfig
+    from repro.models.basecaller import gru_cell as model_cell
+    rng = np.random.default_rng(9)
+    B, H = 16, 32
+    xp = jnp.asarray(rng.standard_normal((B, 3 * H)).astype(np.float32))
+    h = jnp.asarray(rng.standard_normal((B, H)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((H, 3 * H)).astype(np.float32) * 0.1)
+    b = jnp.asarray(rng.standard_normal((3 * H,)).astype(np.float32) * 0.1)
+    got = gru_cell(xp, h, u, b)
+    want = model_cell(h, xp, u, b, QuantConfig(enabled=False))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,L,Kv,G,D,bl", [
+    (2, 64, 2, 4, 16, 16),
+    (3, 100, 1, 8, 32, 32),   # MHA-as-GQA, ragged L (padding path)
+    (2, 48, 4, 1, 8, 16),     # one group (MQA-style)
+])
+def test_decode_attn_vs_ref(B, L, Kv, G, D, bl):
+    from repro.kernels.decode_attn.ops import decode_attn
+    from repro.kernels.decode_attn.ref import decode_attn_ref
+    rng = np.random.default_rng(B * L + D)
+    q = jnp.asarray(rng.standard_normal((B, Kv * G, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, L, Kv, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, L, Kv, D)).astype(np.float32))
+    nv = jnp.asarray(rng.integers(1, L + 1, (B,)), jnp.int32)
+    got = decode_attn(q, k, v, nv, groups=G, bl=bl)
+    want = decode_attn_ref(q, k, v, nv.reshape(-1, 1), G)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attn_ring_semantics():
+    """Only the first n_valid slots may influence the output."""
+    from repro.kernels.decode_attn.ops import decode_attn
+    rng = np.random.default_rng(7)
+    B, L, Kv, G, D = 1, 32, 2, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, Kv * G, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, L, Kv, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, L, Kv, D)).astype(np.float32))
+    nv = jnp.asarray([10], jnp.int32)
+    base = decode_attn(q, k, v, nv, groups=G, bl=8)
+    # corrupt slots >= n_valid: output must not change
+    k2 = k.at[:, 10:].set(999.0)
+    v2 = v.at[:, 10:].set(-999.0)
+    got = decode_attn(q, k2, v2, nv, groups=G, bl=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,39 @@
+"""Prefetch loader: ordering, determinism, error propagation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.loader import PrefetchLoader
+
+
+def test_loader_yields_sequential_steps():
+    loader = PrefetchLoader(lambda s: {"x": np.full((2,), s)}, start_step=3)
+    steps = []
+    for _ in range(4):
+        step, batch = next(loader)
+        steps.append(step)
+        np.testing.assert_array_equal(np.asarray(batch["x"]), step)
+    loader.close()
+    assert steps == [3, 4, 5, 6]
+
+
+def test_loader_places_on_device():
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    loader = PrefetchLoader(lambda s: {"x": np.ones((4,))}, sharding=sh)
+    _, batch = next(loader)
+    assert batch["x"].sharding == sh
+    loader.close()
+
+
+def test_loader_propagates_generator_errors():
+    def bad(step):
+        if step >= 1:
+            raise ValueError("boom")
+        return {"x": np.zeros(1)}
+
+    loader = PrefetchLoader(bad)
+    next(loader)
+    with pytest.raises(ValueError, match="boom"):
+        next(loader)
+    loader.close()

@@ -1,0 +1,100 @@
+"""Property tests on model-family invariants (hypothesis)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (MoEConfig, SSMConfig, mamba_mix, moe_ff)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mamba_params(key, d, ssm):
+    di, r, n = ssm.inner(d), ssm.rank(d), ssm.d_state
+    ks = jax.random.split(key, 5)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di)) * 0.1,
+        "conv_w": jax.random.normal(ks[1], (ssm.d_conv, di)) * 0.1,
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": jax.random.normal(ks[2], (di, r + 2 * n)) * 0.1,
+        "dt_proj": jax.random.normal(ks[3], (r, di)) * 0.1,
+        "dt_bias": jnp.full((di,), -2.0),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,)),
+        "out_proj": jax.random.normal(ks[4], (di, d)) * 0.1,
+    }
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), t=st.integers(1, 10))
+def test_mamba_is_causal(seed, t):
+    """Perturbing input at time t must not change outputs before t."""
+    d, S = 8, 12
+    ssm = SSMConfig(d_state=4, d_conv=4, expand=2)
+    p = _mamba_params(jax.random.PRNGKey(seed), d, ssm)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, S, d))
+    y0, _ = mamba_mix(x, p, ssm, d)
+    x2 = x.at[:, t].add(1.0)
+    y1, _ = mamba_mix(x2, p, ssm, d)
+    np.testing.assert_allclose(np.asarray(y0[:, :t]), np.asarray(y1[:, :t]),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(y0[:, t:]), np.asarray(y1[:, t:]))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_mamba_chunked_state_equals_full(seed):
+    """Processing [0:k] then [k:S] with carried state == one pass."""
+    d, S, k = 8, 16, 7
+    ssm = SSMConfig(d_state=4, d_conv=4, expand=2)
+    p = _mamba_params(jax.random.PRNGKey(seed), d, ssm)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, S, d))
+    y_full, _ = mamba_mix(x, p, ssm, d)
+    y1, st1 = mamba_mix(x[:, :k], p, ssm, d)
+    zero_state = {"h": jnp.zeros_like(st1["h"]),
+                  "conv": jnp.zeros_like(st1["conv"])}
+    y1b, st1b = mamba_mix(x[:, :k], p, ssm, d, state=zero_state)
+    y2, _ = mamba_mix(x[:, k:], p, ssm, d, state=st1b)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1b, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_moe_token_permutation_equivariance(seed):
+    """Permuting tokens permutes outputs (dropless regime)."""
+    T, d, E = 32, 8, 4
+    cfg = MoEConfig(n_experts=E, top_k=2, capacity_factor=float(E))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    p = {"router": jax.random.normal(ks[0], (d, E)),
+         "w1": jax.random.normal(ks[1], (E, d, 16)) * 0.1,
+         "w3": jax.random.normal(ks[2], (E, d, 16)) * 0.1,
+         "w2": jax.random.normal(ks[3], (E, 16, d)) * 0.1}
+    x = jax.random.normal(ks[4], (T, d))
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 9), T)
+    y, _ = moe_ff(x, p, cfg)
+    y_perm, _ = moe_ff(x[perm], p, cfg)
+    np.testing.assert_allclose(np.asarray(y_perm), np.asarray(y[perm]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_moe_respects_capacity(seed):
+    """With capacity_factor ~0, (almost) everything drops => output ~0."""
+    T, d, E = 64, 8, 4
+    cfg = MoEConfig(n_experts=E, top_k=1, capacity_factor=1e-9)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    p = {"router": jax.random.normal(ks[0], (d, E)),
+         "w1": jax.random.normal(ks[1], (E, d, 16)),
+         "w3": jax.random.normal(ks[2], (E, d, 16)),
+         "w2": jax.random.normal(ks[3], (E, 16, d))}
+    x = jax.random.normal(ks[4], (T, d))
+    y, aux = moe_ff(x, p, cfg)
+    # capacity floors at 8 slots/expert: at most 32 of 64 tokens survive
+    assert float(aux["drop_frac"]) >= 0.0
+    kept_rows = np.abs(np.asarray(y)).sum(-1) > 0
+    assert kept_rows.sum() <= 8 * E

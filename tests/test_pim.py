@@ -1,0 +1,69 @@
+"""PIM analytical model must reproduce the paper's headline claims."""
+import pytest
+
+from repro.core import pim
+
+
+def test_isaac_chip_power_area_match_table2():
+    p, a = pim.chip_power_area("cmos", 8)
+    assert abs(p - pim.PAPER_CLAIMS["isaac_power_w"]) / 55.4 < 0.05
+    assert abs(a - pim.PAPER_CLAIMS["isaac_area_mm2"]) / 62.5 < 0.05
+
+
+def test_helix_chip_power_area_match_table2():
+    p, a = pim.chip_power_area("sot", comparators=True)
+    assert abs(p - pim.PAPER_CLAIMS["helix_power_w"]) / 25.7 < 0.10
+    assert abs(a - pim.PAPER_CLAIMS["helix_area_mm2"]) / 43.83 < 0.10
+
+
+def test_headline_fig24_ratios():
+    lad = pim.ladder()
+    h = lad["Helix"]
+    assert abs(h["throughput_x"] - 6.0) / 6.0 < 0.20      # 5.4x computed
+    assert abs(h["per_watt_x"] - 11.9) / 11.9 < 0.15
+    assert abs(h["per_mm2_x"] - 7.5) / 7.5 < 0.15
+
+
+def test_per_step_speedups_guppy_profile():
+    """The calibration targets are paper-reported per-step speedups."""
+    def thr(name):
+        return 1.0 / pim.scheme(name, "guppy").time
+
+    assert abs(thr("CTC") / thr("ADC") - 1.678) < 0.05
+    assert abs(thr("Helix") / thr("CTC") - 2.22) < 0.10
+    assert thr("16-bit") / thr("ISAAC") > 1.03
+    assert thr("SEAT") / thr("16-bit") > 1.0
+
+
+def test_ladder_is_monotone():
+    lad = pim.ladder()
+    order = [lad[s]["throughput_x"] for s in pim.SCHEMES]
+    assert all(b >= a - 1e-9 for a, b in zip(order, order[1:]))
+
+
+def test_chiron_gains_most():
+    """§6.1: Chiron's DNN-heavy profile benefits most from the PIM."""
+    gains = {c: (1 / pim.scheme("Helix", c).time)
+             / (1 / pim.scheme("ISAAC", c).time) for c in pim.CALLERS}
+    assert gains["chiron"] > gains["guppy"]
+    assert gains["chiron"] > gains["scrappie"]
+
+
+def test_beam_width_sensitivity_fig26():
+    """Larger beam width => CTC share grows => bigger CTC-scheme win."""
+    gains = []
+    for w in (5, 10, 20, 40):
+        adc = pim.scheme("ADC", "guppy", beam_width=w)
+        ctc = pim.scheme("CTC", "guppy", beam_width=w)
+        gains.append(adc.time / ctc.time)
+    assert all(b > a for a, b in zip(gains, gains[1:]))
+
+
+def test_adc_resolution_sensitivity_fig25():
+    """SOT-MRAM ADC beats 5-/6-bit CMOS ADCs on perf/W (27.9 %/37.3 %)."""
+    helix = pim.scheme("Helix", "guppy")
+    for bits, want in ((5, 1.279), (6, 1.373)):
+        cmos = pim.scheme(f"cmos{bits}", "guppy")
+        ratio = ((helix.throughput / helix.power_w)
+                 / (cmos.throughput / cmos.power_w))
+        assert ratio > 1.05, (bits, ratio)   # direction + materiality

@@ -1,0 +1,110 @@
+"""Quantization numerics: fake-quant, STE, packing, bit-width behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_qmax():
+    assert quant.qmax(5) == 15
+    assert quant.qmax(8) == 127
+    assert quant.qmax(2) == 1
+
+
+@pytest.mark.parametrize("bits", [3, 4, 5, 8])
+def test_fake_quant_grid(bits):
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    xq = quant.fake_quant(x, bits)
+    scale = float(jnp.max(jnp.abs(x))) / quant.qmax(bits)
+    grid = np.asarray(xq) / scale
+    np.testing.assert_allclose(grid, np.round(grid), atol=1e-4)
+    assert np.abs(grid).max() <= quant.qmax(bits) + 1e-4
+
+
+def test_fake_quant_error_decreases_with_bits():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((256, 128)).astype(np.float32))
+    errs = [float(jnp.mean((quant.fake_quant(x, b) - x) ** 2))
+            for b in (3, 4, 5, 8, 12)]
+    assert all(a > b for a, b in zip(errs, errs[1:]))
+    assert errs[-1] < 1e-6
+
+
+def test_ste_gradient_is_identity():
+    x = jnp.linspace(-1.0, 1.0, 11)
+    g = jax.grad(lambda v: quant.fake_quant(v, 4).sum())(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-6)
+
+
+def test_per_channel_beats_per_tensor():
+    """Per-channel scales must not be worse on badly-scaled channels."""
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((64, 8)).astype(np.float32)
+    w[:, 0] *= 100.0  # one dominant channel wrecks a per-tensor scale
+    w = jnp.asarray(w)
+    pt = quant.fake_quant(w, 5)                    # per-tensor
+    pc = quant.fake_quant(w, 5, axis=(0,))         # per-channel (out dim last)
+    err_pt = float(jnp.mean((pt - w)[:, 1:] ** 2))
+    err_pc = float(jnp.mean((pc - w)[:, 1:] ** 2))
+    assert err_pc < err_pt / 10
+
+
+def test_qdense_matches_dense_at_high_bits():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((4, 32)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    cfg = quant.QuantConfig(enabled=True, bits_w=16, bits_a=16)
+    np.testing.assert_allclose(np.asarray(quant.qdense(x, w, cfg)),
+                               np.asarray(x @ w), rtol=1e-3, atol=1e-3)
+
+
+def test_qdense_disabled_is_exact():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 8)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((8, 8)).astype(np.float32))
+    cfg = quant.QuantConfig(enabled=False)
+    np.testing.assert_allclose(np.asarray(quant.qdense(x, w, cfg)),
+                               np.asarray(x @ w))
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_pack_roundtrip_bounded_error(bits, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    wq, scale = quant.pack_weight(w, bits)
+    assert wq.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(wq))) <= quant.qmax(bits)
+    deq = wq.astype(jnp.float32) * scale
+    # max error bounded by half a quantization step per channel
+    step = np.asarray(scale)
+    assert np.all(np.abs(np.asarray(deq - w)) <= step / 2 + 1e-6)
+
+
+def test_int_matmul_reference_matches_fq_matmul():
+    """int32-accumulate dequant == fake-quant matmul (same grid)."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((8, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    bits = 5
+    xq, sx = quant.pack_act(x, bits)
+    wq, sw = quant.pack_weight(w, bits)
+    got = quant.dequant_matmul_reference(xq, sx, wq, sw)
+    want = (xq.astype(jnp.float32) * sx) @ (wq.astype(jnp.float32) * sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tree_fake_quant_only_touches_matrices():
+    w = jnp.linspace(-1.0, 1.0, 16).reshape(4, 4)  # off-grid values
+    b = jnp.linspace(-1.0, 1.0, 4)
+    out = quant.tree_fake_quant({"w": w, "b": b},
+                                quant.QuantConfig(enabled=True, bits_w=4))
+    assert not np.allclose(np.asarray(out["w"]), np.asarray(w))
+    np.testing.assert_allclose(np.asarray(out["b"]), np.asarray(b))

@@ -1,0 +1,107 @@
+"""SEAT loss (Eq. 4): views, consensus, loss semantics, gradients."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import seat as seat_lib
+from repro.core.quant import QuantConfig
+from repro.data import genome
+from repro.models import basecaller as bc
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = seat_lib.SEATConfig(n_views=3, view_stride=8, max_read_len=32,
+                          consensus_span=64, eta=1.0)
+MCFG = bc.tiny_preset("guppy")
+DCFG = genome.SignalConfig(window=MCFG.input_len, margin=CFG.margin,
+                           max_label_len=32)
+
+
+def _setup(seed=0):
+    params = bc.init_basecaller(jax.random.PRNGKey(seed), MCFG)
+    batch = genome.sample_batch(jax.random.PRNGKey(seed + 1), 4, DCFG)
+    return params, batch
+
+
+def test_make_views_shapes_and_overlap():
+    sig = jnp.arange(2 * (100 + 2 * CFG.margin) * 1, dtype=jnp.float32
+                     ).reshape(2, -1, 1)
+    views, center = seat_lib.make_views(sig, CFG)
+    assert views.shape == (3, 2, 100, 1)
+    assert center == 1
+    # consecutive views are stride-shifted copies
+    np.testing.assert_array_equal(np.asarray(views[0][:, CFG.view_stride:]),
+                                  np.asarray(views[1][:, :-CFG.view_stride]))
+
+
+def test_seat_loss_runs_and_is_finite():
+    params, batch = _setup()
+    fn = functools.partial(bc.apply_basecaller, params, cfg=MCFG)
+    loss, metrics = seat_lib.seat_loss(
+        lambda s: fn(s), batch["signal"], batch["labels"],
+        batch["label_length"], CFG)
+    assert np.isfinite(float(loss))
+    assert float(metrics["ctc_g"]) > 0
+    assert float(metrics["ctc_c"]) > 0
+
+
+def test_seat_reduces_to_ctc_when_disabled():
+    params, batch = _setup()
+    fn = lambda s: bc.apply_basecaller(params, s, MCFG)
+    import dataclasses
+    off = dataclasses.replace(CFG, enabled=False)
+    loss_off, m = seat_lib.seat_loss(fn, batch["signal"], batch["labels"],
+                                     batch["label_length"], off)
+    # equals plain CTC on the center view
+    views, center = seat_lib.make_views(batch["signal"], off)
+    from repro.core import ctc as ctc_lib
+    want = ctc_lib.ctc_loss_batch(fn(views[center]), batch["labels"],
+                                  batch["label_length"]).mean()
+    np.testing.assert_allclose(float(loss_off), float(want), rtol=1e-6)
+
+
+def test_seat_loss_gradients_finite_and_nonzero():
+    params, batch = _setup()
+
+    def loss_fn(p):
+        fn = lambda s: bc.apply_basecaller(p, s, MCFG)
+        loss, _ = seat_lib.seat_loss(fn, batch["signal"], batch["labels"],
+                                     batch["label_length"], CFG)
+        return loss
+
+    g = jax.grad(loss_fn)(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in leaves)
+    assert any(float(jnp.abs(x).max()) > 0 for x in leaves)
+
+
+def test_consensus_gap_zero_when_views_agree_with_truth():
+    """If the model decodes the ground truth deterministically on every view,
+    the consensus equals G and the penalty term vanishes."""
+    # build synthetic log-probs directly: (V=3, B=1, T, A) peaked on a path
+    A, T = 5, 20
+    labels = jnp.asarray([[0, 1, 2, 3, 0, 1]], jnp.int32)
+    path = []
+    for s in np.asarray(labels[0]):
+        path += [int(s), 4]  # symbol then blank
+    path += [4] * (T - len(path))
+    lp = jnp.log(jax.nn.one_hot(jnp.asarray(path), A) * 0.9999 + 1e-5)
+    view_lps = jnp.stack([lp[None], lp[None], lp[None]])  # (3, 1, T, A)
+
+    C, C_len = seat_lib.consensus_reads(view_lps, 1, CFG)
+    assert int(C_len[0]) == 6
+    np.testing.assert_array_equal(np.asarray(C[0][:6]),
+                                  np.asarray(labels[0]))
+
+
+def test_seat_penalizes_systematic_disagreement():
+    """A consensus that differs from G must make loss1 > eta*loss0."""
+    params, batch = _setup()
+    fn = lambda s: bc.apply_basecaller(params, s, MCFG)
+    loss1, m = seat_lib.seat_loss(fn, batch["signal"], batch["labels"],
+                                  batch["label_length"], CFG)
+    # untrained net decodes garbage => consensus != G => positive gap term
+    assert float(loss1) >= CFG.eta * float(m["ctc_g"]) - 1e-5
+    assert float(m["consensus_gap"]) > 0
