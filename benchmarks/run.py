@@ -2,10 +2,17 @@
 aggregation. Prints ``name,us_per_call,derived`` CSV rows.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+                                               [--backend B]
+
+``--backend`` rebinds the process-wide default in
+``repro.kernels.registry`` so every suite's kernel calls route through the
+chosen implementation (auto / ref / interpret / pallas).
 """
 import argparse
 import sys
 import traceback
+
+from repro.kernels import registry
 
 from ._util import emit
 
@@ -15,7 +22,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer training steps for fig21")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--backend", default="auto",
+                    choices=list(registry.BACKENDS),
+                    help="kernel backend for every suite (registry-wide)")
     args = ap.parse_args()
+    registry.set_default_backend(args.backend)
 
     from . import (fig7_quant_throughput, fig9_breakdown, fig21_seat,
                    fig24_pim, fig25_adc, fig26_beamwidth, roofline,

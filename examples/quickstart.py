@@ -3,87 +3,66 @@
     PYTHONPATH=src python examples/quickstart.py
 
 1. simulate nanopore reads (synthetic pore model),
-2. train a reduced Guppy for a few dozen steps with the SEAT loss,
-3. base-call with CTC beam search,
-4. vote a consensus read and score it against the ground truth.
+2. train a reduced Guppy through the pipeline's warm-up + SEAT policy,
+3. base-call a long raw read: chunk -> batch -> CTC decode -> vote,
+all through ``repro.pipeline.BasecallPipeline`` — no hand-wired
+decode/vote plumbing.
+
+Step counts honour ``QUICKSTART_STEPS`` (total; CI sets a small value).
 """
-import functools
+import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ctc as ctc_lib
-from repro.core import metrics, seat as seat_lib
+from repro.core import metrics
 from repro.core.quant import QuantConfig
 from repro.data import genome
-from repro.models import basecaller as bc
-from repro.train.optimizer import AdamW
+from repro.pipeline import BasecallPipeline, TrainPolicy
 
-import dataclasses
+BATCH = 8
 
-WARM_STEPS, SEAT_STEPS, BATCH = 220, 80, 8
+
+def make_policy() -> TrainPolicy:
+    total = int(os.environ.get("QUICKSTART_STEPS", "300"))
+    warm = max(1, int(total * 0.73))          # the 220/80 split, scaled
+    return TrainPolicy(warmup_steps=warm, seat_steps=max(1, total - warm))
 
 
 def main():
-    scfg = seat_lib.SEATConfig(n_views=3, view_stride=8, max_read_len=40,
-                               consensus_span=80)
-    mcfg = bc.demo_preset("guppy").with_quant(
-        QuantConfig(enabled=True, bits_w=5, bits_a=5))
+    # the paper's 5-bit headline config on the CPU-trainable demo preset;
     # 1-mer demo channel (6-mer is the realistic default but needs hours)
-    dcfg = genome.SignalConfig(window=mcfg.input_len, margin=scfg.margin,
-                               max_label_len=40, kmer=1, mean_dwell=6.0)
+    pipe = BasecallPipeline.from_preset(
+        "guppy", scale="demo",
+        quant=QuantConfig(enabled=True, bits_w=5, bits_a=5),
+        backend="auto", beam_width=5)
+    dcfg = pipe.data_config(kmer=1, mean_dwell=6.0, max_label_len=40)
 
-    params = bc.init_basecaller(jax.random.PRNGKey(0), mcfg)
-    from repro.train.optimizer import warmup_cosine
-    opt = AdamW(lr=warmup_cosine(4e-3, 15, WARM_STEPS + SEAT_STEPS))
-    state = opt.init(params)
+    params = pipe.init_params(jax.random.PRNGKey(0))
+    policy = make_policy()
+    trainer = pipe.trainer(policy)
+    state = trainer.init(params)
 
-    def make_step(cfg_seat):
-        @jax.jit
-        def train_step(params, state, batch):
-            def loss_fn(p):
-                fn = lambda s: bc.apply_basecaller(p, s, mcfg)
-                return seat_lib.seat_loss(fn, batch["signal"],
-                                          batch["labels"],
-                                          batch["label_length"], cfg_seat)
-            (loss, m), g = jax.value_and_grad(loss_fn,
-                                              has_aux=True)(params)
-            params, state = opt.update(g, state, params)
-            return params, state, loss, m["consensus_gap"]
-        return train_step
+    print(f"phase 1: 5-bit quantized Guppy, plain CTC, "
+          f"{policy.warmup_steps} steps")
+    print(f"phase 2: SEAT (Eq. 4) for {policy.seat_steps} more steps")
+    for step in range(policy.total_steps):
+        batch = genome.batch_for_step(step, BATCH, dcfg)
+        params, state, loss, m = pipe.train_step(params, state, batch, step)
+        if step % 40 == 0 or step == policy.warmup_steps:
+            phase = pipe.trainer().policy.phase(step)
+            gap = float(m["consensus_gap"])
+            print(f"  step {step:3d} [{phase:6s}]  loss {float(loss):8.3f}"
+                  + (f"  consensus_gap {gap:6.3f}" if phase == "seat" else ""))
 
-    # the paper's own observation (§4.1/Fig 10): "when the read error rate
-    # is high, it is faster to improve the quality of each read
-    # independently" — warm up with loss0, then enable the SEAT term
-    warm = make_step(dataclasses.replace(scfg, enabled=False))
-    full = make_step(scfg)
-    print(f"phase 1: 5-bit quantized Guppy, plain CTC, {WARM_STEPS} steps")
-    for i in range(WARM_STEPS):
-        batch = genome.batch_for_step(i, BATCH, dcfg)
-        params, state, loss, gap = warm(params, state, batch)
-        if i % 40 == 0:
-            print(f"  step {i:3d}  loss {float(loss):8.3f}")
-    print(f"phase 2: SEAT (Eq. 4) for {SEAT_STEPS} more steps")
-    for i in range(WARM_STEPS, WARM_STEPS + SEAT_STEPS):
-        batch = genome.batch_for_step(i, BATCH, dcfg)
-        params, state, loss, gap = full(params, state, batch)
-        if i % 20 == 0:
-            print(f"  step {i:3d}  loss {float(loss):8.3f}  "
-                  f"consensus_gap {float(gap):6.3f}")
-
-    # --- base-call + vote on held-out reads --------------------------------
+    # --- fixed-window base-call + vote on held-out reads -------------------
     batch = genome.batch_for_step(9999, BATCH, dcfg)
-    views, center = seat_lib.make_views(batch["signal"], scfg)
-    lps = jnp.stack([bc.apply_basecaller(params, v, mcfg) for v in views])
-    beam = functools.partial(ctc_lib.ctc_beam_search_batch, beam_width=5,
-                             max_len=40)
-    reads, lens, _ = beam(lps[center])
-    C, C_len = seat_lib.consensus_reads(lps, center, scfg)
-
-    truth, tlen = np.asarray(batch["labels"]), np.asarray(batch["label_length"])
-    read_acc = metrics.accuracy(np.asarray(reads[:, 0]),
-                                np.asarray(lens[:, 0]), truth, tlen)
+    C, C_len, top, top_len, _ = pipe.basecall_windows(batch["signal"],
+                                                      params)
+    truth = np.asarray(batch["labels"])
+    tlen = np.asarray(batch["label_length"])
+    read_acc = metrics.accuracy(np.asarray(top), np.asarray(top_len),
+                                truth, tlen)
     vote_acc = metrics.accuracy(np.asarray(C), np.asarray(C_len), truth,
                                 tlen)
     print(f"\nread accuracy (beam search):   {read_acc:.3f}")
@@ -93,6 +72,16 @@ def main():
           "".join(bases[b] for b in np.asarray(C[0][: int(C_len[0])])))
     print("ground truth:     ",
           "".join(bases[b] for b in truth[0][: int(tlen[0])]))
+
+    # --- long-read path: chunk -> batch -> decode -> stitch ----------------
+    long_sig = np.concatenate([
+        np.asarray(genome.batch_for_step(5000 + i, 1, dcfg)["signal"][0, :, 0])
+        for i in range(4)])
+    result = pipe.basecall(long_sig, params)
+    print(f"\nlong read: {long_sig.shape[0]} samples -> "
+          f"{result.window_reads.shape[0]} windows -> "
+          f"{result.length}-base consensus")
+    print("consensus:", result.sequence()[:48])
 
 
 if __name__ == "__main__":

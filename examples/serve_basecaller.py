@@ -1,79 +1,86 @@
-"""Batched base-calling service: signals in -> consensus reads out.
+"""Batched base-calling service: raw reads in -> consensus reads out.
 
     PYTHONPATH=src python examples/serve_basecaller.py [--requests 6]
 
-The serving pipeline is the paper's full quantized path fused into one
-jitted function per batch: quantized DNN -> CTC beam search -> 3-view read
-vote — the TPU rendition of "everything on one engine" (DESIGN.md §4).
+Two serving modes, both through the unified pipeline API:
+
+* fixed-window batches via ``BasecallPipeline.basecall_windows`` — the
+  paper's fused quantized-DNN -> CTC beam -> 3-view vote in ONE jitted
+  call per batch ("everything on one engine", DESIGN.md §4);
+* long raw reads via ``BasecallEngine`` — slot-based continuous batching
+  over signal windows: short reads retire early, long reads never block
+  the pool (the LM engine's scheduler, reused).
 """
 import argparse
-import functools
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ctc as ctc_lib
-from repro.core import metrics, seat as seat_lib
+from repro.core import metrics
 from repro.core.quant import QuantConfig
 from repro.data import genome
-from repro.models import basecaller as bc
+from repro.pipeline import BasecallPipeline
+from repro.serve.basecall_engine import BasecallEngine, ReadRequest
 
 BASES = "ACGT"
-
-
-class BasecallServer:
-    def __init__(self, params, mcfg, scfg, beam_width=5):
-        self.params, self.mcfg, self.scfg = params, mcfg, scfg
-
-        @jax.jit
-        def pipeline(params, signal):
-            views, center = seat_lib.make_views(signal, scfg)
-            lps = jnp.stack([bc.apply_basecaller(params, v, mcfg)
-                             for v in views])
-            C, C_len = seat_lib.consensus_reads(lps, center, scfg)
-            reads, lens, scores = ctc_lib.ctc_beam_search_batch(
-                lps[center], beam_width=beam_width,
-                max_len=scfg.max_read_len)
-            return C, C_len, reads[:, 0], lens[:, 0], scores[:, 0]
-
-        self._pipeline = pipeline
-
-    def __call__(self, signal_batch):
-        return self._pipeline(self.params, signal_batch)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "interpret", "ref"])
     args = ap.parse_args()
 
-    scfg = seat_lib.SEATConfig(n_views=3, view_stride=8, max_read_len=40,
-                               consensus_span=80)
-    mcfg = bc.demo_preset("guppy").with_quant(
-        QuantConfig(enabled=True, bits_w=5, bits_a=5))
-    dcfg = genome.SignalConfig(window=mcfg.input_len, margin=scfg.margin,
-                               max_label_len=40, kmer=1, mean_dwell=6.0)
-    params = bc.init_basecaller(jax.random.PRNGKey(0), mcfg)
-    server = BasecallServer(params, mcfg, scfg)
+    pipe = BasecallPipeline.from_preset(
+        "guppy", scale="demo",
+        quant=QuantConfig(enabled=True, bits_w=5, bits_a=5),
+        backend=args.backend, beam_width=5)
+    dcfg = pipe.data_config(kmer=1, mean_dwell=6.0, max_label_len=40)
+    params = pipe.init_params(jax.random.PRNGKey(0))
 
+    # --- mode 1: fixed-window batches (the fused serving path) -------------
     total_bases = 0
     t0 = time.perf_counter()
     for r in range(args.requests):
         batch = genome.batch_for_step(r, args.batch, dcfg, seed=7)
-        C, C_len, top, top_len, score = server(batch["signal"])
+        C, C_len, top, top_len, score = pipe.basecall_windows(
+            batch["signal"], params)
         total_bases += int(jnp.sum(C_len))
         acc = metrics.accuracy(np.asarray(C), np.asarray(C_len),
                                np.asarray(batch["labels"]),
                                np.asarray(batch["label_length"]))
         read = "".join(BASES[b] for b in np.asarray(C[0][: int(C_len[0])]))
-        print(f"req {r}: {args.batch} signals -> consensus acc {acc:.3f} "
+        print(f"req {r}: {args.batch} windows -> consensus acc {acc:.3f} "
               f"(untrained weights), first read {read[:32]}...")
     dt = time.perf_counter() - t0
-    print(f"\nserved {args.requests} requests, {total_bases} bases in "
-          f"{dt:.2f}s ({total_bases/dt:.0f} bp/s on CPU)")
+    print(f"\nserved {args.requests} window batches, {total_bases} bases in "
+          f"{dt:.2f}s ({total_bases/dt:.0f} bp/s)")
+
+    # --- mode 2: long reads through the continuous-batching engine ---------
+    rng = np.random.default_rng(0)
+    eng = BasecallEngine(pipe, batch_slots=args.slots)
+    read_lens = [3, 1, 5, 2, 4, 1][: args.requests]
+    for i, n_chunks in enumerate(read_lens):
+        sig = np.concatenate([
+            np.asarray(genome.batch_for_step(100 * i + j, 1, dcfg,
+                                             seed=11)["signal"][0, :, 0])
+            for j in range(n_chunks)])
+        sig += 0.01 * rng.standard_normal(sig.shape).astype(np.float32)
+        eng.submit(ReadRequest(rid=i, signal=sig))
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    print(f"\ncontinuous batching: {len(done)} long reads through "
+          f"{args.slots} slots in {eng.steps} engine steps ({dt:.2f}s)")
+    for rid in sorted(done):
+        res = done[rid].result
+        print(f"  read {rid}: {done[rid].windows.shape[0]:2d} windows -> "
+              f"{res.length:3d} bases  {res.sequence()[:24]}...")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,12 @@
 """Architecture registry: the paper's base-callers + 10 assigned LM archs.
 
+``list_archs()``        -> all known arch ids.
 ``get_config(arch_id)`` -> full published config (dry-run / roofline only).
 ``get_smoke(arch_id)``  -> reduced same-family config (CPU tests).
 """
 from __future__ import annotations
 
+import difflib
 import importlib
 
 BASECALLER_IDS = ("guppy", "scrappie", "chiron")
@@ -41,9 +43,17 @@ _MODULES = {
 }
 
 
+def list_archs() -> tuple:
+    """All registered architecture ids (base-callers + LMs)."""
+    return ARCH_IDS
+
+
 def _module(arch_id: str):
     if arch_id not in _MODULES:
-        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_MODULES)}")
+        close = difflib.get_close_matches(arch_id, _MODULES, n=1)
+        hint = f"; did you mean '{close[0]}'?" if close else ""
+        raise KeyError(f"unknown arch '{arch_id}'{hint} "
+                       f"(known: {sorted(_MODULES)})")
     return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
 
 

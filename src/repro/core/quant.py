@@ -101,6 +101,18 @@ def pack_act(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return quantize_int(x, scale, bits), scale
 
 
+def pack_act_rows(x: jnp.ndarray, bits: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (int8 codes, per-row fp32 scales (M, 1)) for x (M, K).
+
+    Per-row scales make the integer serving path batch-composition
+    invariant: a window quantizes identically whether it shares the batch
+    with 1 or 100 other windows (continuous batching ==
+    fixed-batch pipeline, bit for bit)."""
+    scale = compute_scale(x, bits, axis=(x.ndim - 1,)).astype(jnp.float32)
+    return quantize_int(x, scale, bits), scale
+
+
 def dequant_matmul_reference(xq, x_scale, wq, w_scale):
     """Oracle for the quantized matmul: int32 accumulate, fp dequant."""
     acc = xq.astype(jnp.int32) @ wq.astype(jnp.int32)

@@ -1,0 +1,11 @@
+"""Distribution substrate: logical-axis sharding rules + compressed collectives.
+
+``sharding``    — logical ("dp"/"tp") -> physical mesh-axis mapping, the
+                  ambient-mesh context used by models/launch, and the
+                  path-name param partitioning rules.
+``collectives`` — int8 block compression for the slow inter-pod gradient
+                  all-reduce (error-feedback variant preserves the sum).
+"""
+from repro.dist import collectives, sharding  # noqa: F401
+
+__all__ = ["collectives", "sharding"]

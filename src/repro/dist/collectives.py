@@ -1,0 +1,80 @@
+"""int8 block compression for the inter-pod gradient all-reduce.
+
+The 2-pod production mesh (launch/mesh.py) crosses a slow DCI on exactly one
+collective: the pure-data-parallel gradient all-reduce over the "pod" axis.
+Gradients tolerate aggressive quantization there, so the wire format is
+1-byte codes + one f32 scale per 256-element block (~3.9x vs f32), and the
+error-feedback variant (``ef_compress``) carries the rounding residual into
+the next step so the *sum* of transmitted gradients stays exact — the
+standard EF-SGD trick that keeps convergence intact.
+
+All functions are jit-compatible and shape-static.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+BLOCK = 256      # elements per scale block
+_QMAX = 127.0    # int8 symmetric grid
+
+
+def _blocked(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    """Flatten + zero-pad to a whole number of blocks -> (nblk, BLOCK)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, BLOCK), pad
+
+
+def compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (any shape, float) -> (codes int8 (n,), scales f32 (nblocks,)).
+
+    Per-block symmetric absmax scaling; max abs error <= scale/2 per block.
+    """
+    blocks, _ = _blocked(x.astype(jnp.float32))
+    amax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jnp.maximum(amax, 1e-30) / _QMAX              # (nblk,)
+    q = jnp.round(blocks / scale[:, None])
+    codes = jnp.clip(q, -_QMAX, _QMAX).astype(jnp.int8)
+    return codes.reshape(-1)[: x.size], scale.astype(jnp.float32)
+
+
+def decompress(codes: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    """Inverse of :func:`compress` back to f32 of ``shape``."""
+    blocks, _ = _blocked(codes)
+    out = blocks.astype(jnp.float32) * scale[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def roundtrip(x: jnp.ndarray) -> jnp.ndarray:
+    """compress ∘ decompress — what the receiving pod reconstructs."""
+    codes, scale = compress(x)
+    return decompress(codes, scale, x.shape)
+
+
+def ef_compress(grad: jnp.ndarray, residual: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback compression step.
+
+    wire = Q(grad + residual); new_residual = (grad + residual) - wire, so
+    Σ_t wire_t + residual_T == Σ_t grad_t exactly (up to fp addition).
+    Returns (wire (decompressed f32, what the collective carries), residual).
+    """
+    acc = grad + residual
+    wire = roundtrip(acc)
+    return wire, acc - wire
+
+
+def compression_ratio(shape) -> float:
+    """f32 bytes / wire bytes for a tensor of ``shape`` (~3.94 at BLOCK=256)."""
+    n = 1
+    for d in shape:
+        n *= d
+    nblk = -(-n // BLOCK)
+    return (4.0 * n) / (n + 4.0 * nblk)

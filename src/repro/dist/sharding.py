@@ -1,0 +1,186 @@
+"""Logical-axis sharding: one vocabulary ("dp", "tp") over many meshes.
+
+Models and launch code never name physical mesh axes.  They speak two
+logical axes:
+
+  "dp" — the batch/data direction.  Maps to every pure-data axis present
+         on the mesh: ("pod", "data") on the 2-pod mesh, ("data",) on a
+         single pod, () on a host mesh with no data axis.
+  "tp" — the model/tensor direction.  Maps to ("model",) when present.
+
+``use_mesh``/``get_mesh`` carry the ambient mesh (a plain context stack —
+importing this module never touches jax device state), ``constrain``
+applies a with_sharding_constraint and degrades to a no-op when no mesh is
+active (CPU tests, single-host examples), and ``param_sharding_tree``
+implements the path-name partitioning rules for parameter pytrees
+(FSDP-style: last axis -> tp, first large axis -> dp; MoE expert tables
+EP-shard over the model axis — see models/layers.moe_ff).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# data-parallel-ish physical axes in priority order; "pod" is the pure-DP
+# inter-pod axis of the 512-chip mesh (launch/mesh.py)
+_DP_AXES = ("pod", "data")
+_TP_AXIS = "model"
+
+_state = threading.local()
+
+
+def _stack():
+    if not hasattr(_state, "meshes"):
+        _state.meshes = []
+    return _state.meshes
+
+
+def get_mesh() -> Optional[jax.sharding.Mesh]:
+    """The innermost mesh installed by :func:`use_mesh`, or None."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: jax.sharding.Mesh):
+    """Install ``mesh`` as the ambient mesh for ``constrain``/``get_mesh``."""
+    _stack().append(mesh)
+    try:
+        yield mesh
+    finally:
+        _stack().pop()
+
+
+def _physical(logical_name, mesh):
+    """One logical axis name -> physical axis (str | tuple | None)."""
+    if logical_name is None:
+        return None
+    if logical_name == "dp":
+        axes = tuple(a for a in _DP_AXES if a in mesh.axis_names)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+    if logical_name == "tp":
+        return _TP_AXIS if _TP_AXIS in mesh.axis_names else None
+    # allow passing a physical axis name straight through
+    return logical_name if logical_name in mesh.axis_names else None
+
+
+def logical_spec(logical: Sequence, mesh) -> Tuple:
+    """Map a tuple of logical axis names to physical mesh axes."""
+    return tuple(_physical(a, mesh) for a in logical)
+
+
+def constrain(x, logical: Sequence):
+    """with_sharding_constraint under the ambient mesh; no-op without one."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = logical_spec(logical, mesh)
+    if all(a is None for a in spec):
+        return x
+    # only constrain when every sharded dim divides its axis group —
+    # GSPMD handles padding, but uneven activation shards are never what
+    # the rules here intend (smoke configs on production meshes).
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            continue
+        n = _axis_size(mesh, ax)
+        if dim % n != 0:
+            return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def _axis_size(mesh, axis) -> int:
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# parameter partitioning by path name
+# ---------------------------------------------------------------------------
+
+def path_str(path) -> str:
+    """jax key-path -> "a/0/b" style string (stable across jax versions)."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# (regex, logical tuple) pairs; first match wins.  The logical tuple is
+# right-aligned against the param's trailing dims (scanned layer dims keep
+# their leading None).
+_DEFAULT_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # MoE expert tables: EP over the model axis, per-expert ff over data
+    # (2-D expert sharding; see models/layers.moe_ff docstring)
+    (r"(^|/)moe/(w1|w3)$", ("tp", None, "dp")),
+    (r"(^|/)moe/w2$", ("tp", "dp", None)),
+    (r"(^|/)moe/(sw1|sw3|sw2|router)$", (None, "tp")),
+    # embedding / head tables: FSDP over vocab, tp over d
+    (r"(^|/)(embed|head)$", ("dp", "tp")),
+)
+
+
+def arch_overrides(cfg) -> Tuple[Tuple[str, Tuple], ...]:
+    """Per-architecture extra rules, matched before the defaults."""
+    rules = []
+    if getattr(cfg, "tie_embeddings", False):
+        # tied table doubles as the CE head: keep the vocab layout so the
+        # head matmul contracts over the replicated d axis
+        rules.append((r"(^|/)embed$", ("tp", None)))
+    return tuple(rules)
+
+
+def param_logical(path: str, ndim: int, scanned: bool,
+                  overrides: Tuple[Tuple[str, Tuple], ...] = ()) -> Tuple:
+    """Logical axes for one parameter leaf.
+
+    Default rule: biases/scalars/norm gains replicate; matrices shard the
+    last axis over "tp" and the first non-scanned axis over "dp" (FSDP).
+    """
+    eff = ndim - (1 if scanned else 0)       # dims the rules describe
+    for pat, logical in tuple(overrides) + _DEFAULT_RULES:
+        if re.search(pat, path):
+            if len(logical) != eff:
+                continue
+            return (None,) * (ndim - eff) + tuple(logical)
+    if eff <= 1:
+        return (None,) * ndim
+    logical = [None] * eff
+    logical[-1] = "tp"
+    logical[0] = "dp"
+    return (None,) * (ndim - eff) + tuple(logical)
+
+
+def param_sharding_tree(shapes, mesh, overrides=()):
+    """ShapeDtypeStruct tree -> NamedSharding tree by path-name rules.
+
+    A sharded dim that does not divide its mesh-axis group falls back to
+    replicated on that dim (smoke configs lowering on big meshes).
+    """
+    def f(path, leaf):
+        s = path_str(path)
+        logical = param_logical(s, leaf.ndim, "blocks" in s, overrides)
+        spec = list(logical_spec(logical, mesh))
+        for i, (dim, ax) in enumerate(zip(leaf.shape, spec)):
+            if ax is not None and dim % _axis_size(mesh, ax) != 0:
+                spec[i] = None
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, shapes)

@@ -14,4 +14,15 @@ ref.py (pure-jnp oracle; tests assert allclose across shape sweeps).
                  recurrent hot loop, Table 3)
   decode_attn  — online-softmax single-token attention over a KV cache
                  (the serving memory-roofline hot-spot, EXPERIMENTS §Perf)
+
+Dispatch is centralized in ``repro.kernels.registry``: every op registers a
+(ref, pallas) pair and callers resolve concrete callables with
+``registry.get_op(name, backend)`` where backend is one of
+auto | pallas | interpret | ref.  The ``registry.Backend`` dataclass is the
+switch models and the pipeline thread through their call stacks.
 """
+from repro.kernels import registry  # noqa: F401
+from repro.kernels.registry import Backend, get_op, register_op  # noqa: F401
+
+__all__ = ["registry", "Backend", "get_op", "register_op"]
+

@@ -1,0 +1,11 @@
+"""jax version compatibility for the Pallas TPU surface.
+
+The kernels target the current Pallas API name ``pltpu.CompilerParams``;
+older jax releases ship the identical class as ``TPUCompilerParams``.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

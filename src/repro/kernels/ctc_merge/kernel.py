@@ -23,7 +23,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels._compat import CompilerParams
 
 NEG = -1.0e9
 
@@ -54,7 +56,7 @@ def ctc_merge_pallas(eq: jnp.ndarray, scores: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, bi), lambda b, i: (b, i)),
         out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(eq, scores)

@@ -1,4 +1,4 @@
-"""jit'd wrapper for the CTC beam-merge kernel (padding + auto-interpret)."""
+"""CTC beam-merge public wrapper — dispatch via ``repro.kernels.registry``."""
 from __future__ import annotations
 
 import functools
@@ -6,26 +6,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.ctc_merge.kernel import ctc_merge_pallas
 from repro.kernels.ctc_merge.ref import ctc_merge_ref
 
 NEG = -1.0e9
 
 
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-@functools.partial(jax.jit, static_argnames=("bi", "interpret"))
-def masked_logsumexp(eq: jnp.ndarray, scores: jnp.ndarray, *, bi: int = 128,
-                     interpret: bool | None = None) -> jnp.ndarray:
-    """Batched masked logsumexp: (B, C, C) mask x (B, C) scores -> (B, C).
-
-    Rows must be self-connected (eq[b,i,i]=1) so no row is empty.
-    Pads C to the tile size with inert (self-connected, NEG-score) lanes.
-    """
-    if interpret is None:
-        interpret = _auto_interpret()
+def _impl_pallas(eq, scores, *, bi: int = 128,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Pad C to the tile size with inert (self-connected, NEG) lanes."""
     B, C, _ = eq.shape
     pad = (-C) % bi
     if pad:
@@ -39,6 +29,31 @@ def masked_logsumexp(eq: jnp.ndarray, scores: jnp.ndarray, *, bi: int = 128,
     out = ctc_merge_pallas(eq_p.astype(jnp.int8), s_p.astype(jnp.float32),
                            bi=bi, interpret=interpret)
     return out[:, :C]
+
+
+def _impl_ref(eq, scores, **_tiles) -> jnp.ndarray:
+    return ctc_merge_ref(eq, scores.astype(jnp.float32))
+
+
+registry.register_op("masked_logsumexp", ref=_impl_ref, pallas=_impl_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "backend"))
+def _dispatch(eq, scores, *, bi, backend):
+    return registry.get_op("masked_logsumexp", backend)(eq, scores, bi=bi)
+
+
+def masked_logsumexp(eq: jnp.ndarray, scores: jnp.ndarray, *, bi: int = 128,
+                     interpret: bool | None = None,
+                     backend: str | None = None) -> jnp.ndarray:
+    """Batched masked logsumexp: (B, C, C) mask x (B, C) scores -> (B, C).
+
+    Rows must be self-connected (eq[b,i,i]=1) so no row is empty.
+    Backend resolves before the jit boundary (see quant_matmul.ops)."""
+    if interpret is not None:
+        backend = "interpret" if interpret else "pallas"
+    return _dispatch(eq, scores, bi=bi,
+                     backend=registry.resolve_backend(backend))
 
 
 __all__ = ["masked_logsumexp", "ctc_merge_ref"]

@@ -18,7 +18,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels._compat import CompilerParams
 
 M_INIT = -0.5e9
 MASK_NEG = -1.0e9
@@ -91,7 +93,7 @@ def decode_attn_pallas(q: jnp.ndarray, k_cache: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((H, 1), jnp.float32),
                         pltpu.VMEM((H, 1), jnp.float32),
                         pltpu.VMEM((H, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(n_valid, q, k_cache, v_cache)

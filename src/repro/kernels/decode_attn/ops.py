@@ -1,4 +1,4 @@
-"""jit'd wrapper for the decode-attention kernel (padding, auto-interpret)."""
+"""Decode-attention public wrapper — dispatch via ``repro.kernels.registry``."""
 from __future__ import annotations
 
 import functools
@@ -6,25 +6,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.decode_attn.kernel import decode_attn_pallas
 from repro.kernels.decode_attn.ref import decode_attn_ref
 
 
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-@functools.partial(jax.jit, static_argnames=("groups", "bl", "interpret"))
-def decode_attn(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
-                n_valid: jnp.ndarray, *, groups: int, bl: int = 256,
-                interpret: bool | None = None) -> jnp.ndarray:
-    """Single-token GQA attention over a ring/full cache.
-
-    q (B, H, D); caches (B, L, Kv, D) with H = Kv*groups; n_valid (B,).
-    Pads L to the block size (padded slots are masked by n_valid).
-    """
-    if interpret is None:
-        interpret = _auto_interpret()
+def _impl_pallas(q, k_cache, v_cache, n_valid, *, groups: int, bl: int = 256,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Pad L to the block size (padded slots are masked by n_valid)."""
     L = k_cache.shape[1]
     bl = min(bl, max(L, 8))
     pad = (-L) % bl
@@ -35,6 +24,36 @@ def decode_attn(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     return decode_attn_pallas(q, k_cache, v_cache,
                               n_valid.reshape(-1, 1).astype(jnp.int32),
                               groups=groups, bl=bl, interpret=interpret)
+
+
+def _impl_ref(q, k_cache, v_cache, n_valid, *, groups: int,
+              **_tiles) -> jnp.ndarray:
+    return decode_attn_ref(q, k_cache, v_cache,
+                           n_valid.reshape(-1, 1).astype(jnp.int32),
+                           groups=groups)
+
+
+registry.register_op("decode_attn", ref=_impl_ref, pallas=_impl_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "bl", "backend"))
+def _dispatch(q, k_cache, v_cache, n_valid, *, groups, bl, backend):
+    return registry.get_op("decode_attn", backend)(
+        q, k_cache, v_cache, n_valid, groups=groups, bl=bl)
+
+
+def decode_attn(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                n_valid: jnp.ndarray, *, groups: int, bl: int = 256,
+                interpret: bool | None = None,
+                backend: str | None = None) -> jnp.ndarray:
+    """Single-token GQA attention over a ring/full cache.
+
+    q (B, H, D); caches (B, L, Kv, D) with H = Kv*groups; n_valid (B,).
+    Backend resolves before the jit boundary (see quant_matmul.ops)."""
+    if interpret is not None:
+        backend = "interpret" if interpret else "pallas"
+    return _dispatch(q, k_cache, v_cache, n_valid, groups=groups, bl=bl,
+                     backend=registry.resolve_backend(backend))
 
 
 __all__ = ["decode_attn", "decode_attn_ref"]

@@ -22,7 +22,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels._compat import CompilerParams
 
 
 def _gru_kernel(xp_ref, h_ref, u_ref, b_ref, o_ref):
@@ -61,7 +63,7 @@ def gru_cell_pallas(x_proj: jnp.ndarray, h: jnp.ndarray, u: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bb, H), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x_proj, h, u, b)

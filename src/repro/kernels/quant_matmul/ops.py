@@ -1,4 +1,9 @@
-"""jit'd public wrapper: padding, auto-interpret on CPU, fp fast-path."""
+"""quant_matmul public wrapper — dispatch via ``repro.kernels.registry``.
+
+The Pallas path pads ragged shapes to MXU tiles; the ref path is the
+int32-accumulate oracle.  Backend selection (pallas / interpret / ref /
+auto) lives in the registry, not here.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,12 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant as quant_lib
+from repro.kernels import registry
 from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
 from repro.kernels.quant_matmul.ref import quant_matmul_ref
-
-
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x, mult, axis):
@@ -24,13 +26,9 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray, x_scale: jnp.ndarray,
-                 w_scale: jnp.ndarray, *, bm: int = 128, bn: int = 128,
-                 bk: int = 128, interpret: bool | None = None) -> jnp.ndarray:
-    """Quantized matmul over int8 codes; pads ragged shapes to MXU tiles."""
-    if interpret is None:
-        interpret = _auto_interpret()
+def _impl_pallas(xq, wq, x_scale, w_scale, *, bm: int = 128, bn: int = 128,
+                 bk: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """Pad ragged shapes to MXU tiles and run the Pallas kernel."""
     M, K = xq.shape
     N = wq.shape[1]
     xq_p = _pad_to(_pad_to(xq, bm, 0), bk, 1)
@@ -41,13 +39,46 @@ def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray, x_scale: jnp.ndarray,
     return out[:M, :N]
 
 
+def _impl_ref(xq, wq, x_scale, w_scale, **_tiles) -> jnp.ndarray:
+    return quant_matmul_ref(xq, wq, x_scale.reshape(1, 1),
+                            w_scale.reshape(1, -1))
+
+
+registry.register_op("quant_matmul", ref=_impl_ref, pallas=_impl_pallas)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "backend"))
+def _dispatch(xq, wq, x_scale, w_scale, *, bm, bn, bk, backend):
+    return registry.get_op("quant_matmul", backend)(
+        xq, wq, x_scale, w_scale, bm=bm, bn=bn, bk=bk)
+
+
+def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray, x_scale: jnp.ndarray,
+                 w_scale: jnp.ndarray, *, bm: int = 128, bn: int = 128,
+                 bk: int = 128, interpret: bool | None = None,
+                 backend: str | None = None) -> jnp.ndarray:
+    """Quantized matmul over int8 codes; pads ragged shapes to MXU tiles.
+
+    ``interpret`` is a deprecation shim (True -> backend="interpret",
+    False -> "pallas"); prefer ``backend``.  The backend resolves BEFORE
+    the jit boundary so ``registry.set_default_backend`` takes effect on
+    the next call rather than being pinned by a stale trace.
+    """
+    if interpret is not None:
+        backend = "interpret" if interpret else "pallas"
+    return _dispatch(xq, wq, x_scale, w_scale, bm=bm, bn=bn, bk=bk,
+                     backend=registry.resolve_backend(backend))
+
+
 def qmm_from_float(x: jnp.ndarray, w: jnp.ndarray, bits: int = 5,
-                   interpret: bool | None = None) -> jnp.ndarray:
+                   interpret: bool | None = None,
+                   backend: str | None = None) -> jnp.ndarray:
     """Quantize fp inputs on the fly and run the integer kernel."""
     xq, sx = quant_lib.pack_act(x, bits)
     wq, sw = quant_lib.pack_weight(w, bits)
     return quant_matmul(xq, wq, sx.reshape(1, 1), sw.reshape(1, -1),
-                        interpret=interpret)
+                        interpret=interpret, backend=backend)
 
 
 __all__ = ["quant_matmul", "qmm_from_float", "quant_matmul_ref"]

@@ -1,0 +1,141 @@
+"""Central kernel backend registry — ONE dispatch point for all Pallas ops.
+
+Every accelerated op in the repo is registered here under a name with two
+implementations:
+
+  ref     — pure-jnp oracle, identical public signature (differentiable,
+            runs anywhere; also the numerics ground truth in tests)
+  pallas  — the tiled Pallas TPU kernel behind its padding wrapper; takes
+            an ``interpret`` keyword so the same body executes on CPU
+
+and callers resolve a concrete callable with::
+
+    op = registry.get_op("quant_matmul", backend="auto")
+
+Backends:
+  auto       pallas on TPU, interpret elsewhere (the old per-op
+             ``_auto_interpret`` heuristic, now in exactly one place)
+  pallas     compiled Pallas kernel (TPU)
+  interpret  Pallas kernel body on the interpreter (CPU-testable)
+  ref        the jnp oracle
+
+``Backend`` is the value models/pipeline code threads around: a frozen,
+hashable switch (safe as a jit static argument) whose ``op(name)`` resolves
+through this registry.  ``set_default_backend`` rebinds what "auto" means
+process-wide (benchmarks ``--backend``, CI).
+
+Ops register themselves at import of their ``ops.py``; ``get_op`` lazily
+imports the owning module so callers never need kernel-package imports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import functools
+import importlib
+from typing import Callable, Dict, Optional
+
+import jax
+
+BACKENDS = ("auto", "pallas", "interpret", "ref")
+
+# op name -> module that registers it (lazy import on first get_op)
+_OP_MODULES = {
+    "quant_matmul": "repro.kernels.quant_matmul.ops",
+    "gru_cell": "repro.kernels.gru_cell.ops",
+    "masked_logsumexp": "repro.kernels.ctc_merge.ops",
+    "decode_attn": "repro.kernels.decode_attn.ops",
+    "mismatch_bits": "repro.kernels.vote_cmp.ops",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpEntry:
+    name: str
+    ref: Callable
+    pallas: Callable      # must accept an ``interpret: bool`` keyword
+
+
+_REGISTRY: Dict[str, OpEntry] = {}
+_default_backend = "auto"
+
+
+def register_op(name: str, *, ref: Callable, pallas: Callable) -> None:
+    """Register (or re-register) an op's reference + Pallas implementations."""
+    _REGISTRY[name] = OpEntry(name=name, ref=ref, pallas=pallas)
+
+
+def list_ops() -> tuple:
+    """All registered op names (forces registration of the known set)."""
+    for name in _OP_MODULES:
+        _ensure(name)
+    return tuple(sorted(_REGISTRY))
+
+
+def set_default_backend(backend: str) -> None:
+    """Process-wide backend used when callers pass backend=None/"auto"."""
+    global _default_backend
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    _default_backend = backend
+
+
+def get_default_backend() -> str:
+    return _default_backend
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """None/"auto" -> the concrete backend for this process/host."""
+    b = backend or _default_backend
+    if b == "auto":
+        b = _default_backend
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "interpret"
+    if b not in BACKENDS:
+        raise ValueError(f"unknown backend {b!r}; one of {BACKENDS}")
+    return b
+
+
+def _ensure(name: str) -> OpEntry:
+    if name not in _REGISTRY:
+        mod = _OP_MODULES.get(name)
+        if mod is not None:
+            importlib.import_module(mod)
+    if name not in _REGISTRY:
+        close = difflib.get_close_matches(name, list(_OP_MODULES), n=1)
+        hint = f"; did you mean {close[0]!r}?" if close else ""
+        raise KeyError(f"unknown op {name!r}{hint} "
+                       f"(known: {sorted(set(_REGISTRY) | set(_OP_MODULES))})")
+    return _REGISTRY[name]
+
+
+def get_op(name: str, backend: Optional[str] = None) -> Callable:
+    """Resolve an op to a concrete callable for ``backend``."""
+    entry = _ensure(name)
+    b = resolve_backend(backend)
+    if b == "ref":
+        return entry.ref
+    return functools.partial(entry.pallas, interpret=(b == "interpret"))
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """The single compute-backend switch threaded through models/pipeline.
+
+    Frozen + hashable so it can ride through jit static arguments.  ``mode``
+    is a registry backend name; ``op(name)`` resolves through the registry
+    at trace time.
+    """
+    mode: str = "auto"
+
+    def __post_init__(self):
+        if self.mode not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.mode!r}; one of {BACKENDS}")
+
+    def op(self, name: str) -> Callable:
+        return get_op(name, self.mode)
+
+    @property
+    def resolved(self) -> str:
+        return resolve_backend(self.mode)

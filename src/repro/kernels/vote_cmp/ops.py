@@ -1,4 +1,8 @@
-"""jit'd wrapper: substring extraction, bit encoding, padding, match finding."""
+"""Vote comparator public wrapper — dispatch via ``repro.kernels.registry``.
+
+Substring extraction + bit encoding happen outside the kernel; both
+backends consume the same (n, K*3) bit-plane tensors.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,12 +10,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.vote_cmp.kernel import vote_cmp_pallas
 from repro.kernels.vote_cmp.ref import substring_bits, vote_cmp_ref
-
-
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_axis(x, mult, axis, value=0):
@@ -23,20 +24,11 @@ def _pad_axis(x, mult, axis, value=0):
     return jnp.pad(x, widths, constant_values=value)
 
 
-@functools.partial(jax.jit, static_argnames=("K", "bm", "bn", "bk",
-                                             "interpret"))
-def mismatch_bits(r1: jnp.ndarray, r2: jnp.ndarray, K: int,
-                  *, bm: int = 128, bn: int = 128, bk: int = 128,
-                  interpret: bool | None = None) -> jnp.ndarray:
-    """All-substring comparator: (L1-K+1, L2-K+1) XOR-bit counts.
-
-    Zero entries mark exact K-window matches (paper: no SL current).
-    """
-    if interpret is None:
-        interpret = _auto_interpret()
+def _impl_pallas(r1, r2, *, K: int, bm: int = 128, bn: int = 128,
+                 bk: int = 128, interpret: bool = False) -> jnp.ndarray:
     a = substring_bits(r1, K)                  # (n1, K*3)
     b = substring_bits(r2, K)                  # (n2, K*3)
-    n1, D = a.shape
+    n1, _ = a.shape
     n2 = b.shape[0]
     ra = a.sum(-1, dtype=jnp.int32)[:, None]
     rb = b.sum(-1, dtype=jnp.int32)[None, :]
@@ -49,16 +41,46 @@ def mismatch_bits(r1: jnp.ndarray, r2: jnp.ndarray, K: int,
     return out[:n1, :n2]
 
 
+def _impl_ref(r1, r2, *, K: int, **_tiles) -> jnp.ndarray:
+    return vote_cmp_ref(substring_bits(r1, K), substring_bits(r2, K))
+
+
+registry.register_op("mismatch_bits", ref=_impl_ref, pallas=_impl_pallas)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("K", "bm", "bn", "bk", "backend"))
+def _dispatch(r1, r2, *, K, bm, bn, bk, backend):
+    return registry.get_op("mismatch_bits", backend)(
+        r1, r2, K=K, bm=bm, bn=bn, bk=bk)
+
+
+def mismatch_bits(r1: jnp.ndarray, r2: jnp.ndarray, K: int,
+                  *, bm: int = 128, bn: int = 128, bk: int = 128,
+                  interpret: bool | None = None,
+                  backend: str | None = None) -> jnp.ndarray:
+    """All-substring comparator: (L1-K+1, L2-K+1) XOR-bit counts.
+
+    Zero entries mark exact K-window matches (paper: no SL current).
+    Backend resolves before the jit boundary (see quant_matmul.ops)."""
+    if interpret is not None:
+        backend = "interpret" if interpret else "pallas"
+    return _dispatch(r1, r2, K=K, bm=bm, bn=bn, bk=bk,
+                     backend=registry.resolve_backend(backend))
+
+
 def find_matches(r1: jnp.ndarray, r2: jnp.ndarray, K: int,
-                 interpret: bool | None = None) -> jnp.ndarray:
+                 interpret: bool | None = None,
+                 backend: str | None = None) -> jnp.ndarray:
     """Boolean (n1, n2): exact K-length window matches between two reads."""
-    return mismatch_bits(r1, r2, K, interpret=interpret) == 0
+    return mismatch_bits(r1, r2, K, interpret=interpret,
+                         backend=backend) == 0
 
 
 def best_match(r1: jnp.ndarray, r2: jnp.ndarray, K: int,
-               interpret: bool | None = None):
+               interpret: bool | None = None, backend: str | None = None):
     """(i, j, found): positions of the first exact K-window match."""
-    m = mismatch_bits(r1, r2, K, interpret=interpret)
+    m = mismatch_bits(r1, r2, K, interpret=interpret, backend=backend)
     flat = jnp.argmin(m.reshape(-1))
     found = m.reshape(-1)[flat] == 0
     n2 = m.shape[1]

@@ -19,12 +19,15 @@ paper's.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantConfig, fq_act, fq_weight, qdense
+from repro.core import quant as quant_lib
+from repro.core.quant import (QuantConfig, fake_quant, fq_act, fq_weight,
+                              qdense)
+from repro.kernels.registry import Backend
 
 N_BASES = 4
 N_CLASSES = 5  # A C G T blank
@@ -138,9 +141,43 @@ def init_basecaller(key, cfg: BasecallerConfig):
 # apply
 # ---------------------------------------------------------------------------
 
-def _conv1d(x, w, b, stride, q: QuantConfig):
-    """x: (B, T, C) 'SAME' conv with quantization-aware weights/acts."""
-    xq = fq_act(x, q)
+def _qdense_backend(x, w, q: QuantConfig, backend: Backend,
+                    b: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Dense projection on the integer serving path.
+
+    With quantization enabled the matmul runs as int8-container codes on
+    the registry's ``quant_matmul`` op (the paper's NVM dot-product engine
+    on the MXU); otherwise it is a plain fp matmul.  Inference-only: the
+    packed-integer path has no STE gradients.
+
+    Activations carry PER-ROW scales (folded into the epilogue outside the
+    kernel, whose dequant wants a scalar) so each example's numerics are
+    independent of who else shares the batch — the continuous-batching
+    engine and the fixed-batch pipeline then agree bit for bit.
+    """
+    lead, F = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, F)
+    if q.enabled:
+        xq, sx = quant_lib.pack_act_rows(x2, q.bits_a)       # (M,1) scales
+        wq, sw = quant_lib.pack_weight(w, q.bits_w)
+        one = jnp.ones((1, 1), jnp.float32)
+        y = backend.op("quant_matmul")(xq, wq, one, sw) * sx
+    else:
+        y = x2 @ w
+    y = y.reshape(lead + (w.shape[-1],))
+    return y if b is None else y + b
+
+
+def _conv1d(x, w, b, stride, q: QuantConfig, per_example: bool = False):
+    """x: (B, T, C) 'SAME' conv with quantization-aware weights/acts.
+
+    ``per_example`` scales activations per batch row (serving path — see
+    ``_qdense_backend``); training keeps the FQN per-tensor scale.
+    """
+    if per_example and q.enabled:
+        xq = fake_quant(x, q.bits_a, axis=(1, 2))
+    else:
+        xq = fq_act(x, q)
     wq = fq_weight(w, q)
     y = jax.lax.conv_general_dilated(
         xq, wq, window_strides=(stride,), padding="SAME",
@@ -173,18 +210,39 @@ def lstm_cell(state, x_proj, u, b, q: QuantConfig):
     return (o * jax.nn.tanh(c_new), c_new)
 
 
-def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool):
-    """x: (B, T, F) -> (B, T, H). Input projection hoisted out of the scan."""
+def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool,
+             backend: Optional[Backend] = None):
+    """x: (B, T, F) -> (B, T, H). Input projection hoisted out of the scan.
+
+    With a ``backend``, the input projection runs on the integer
+    ``quant_matmul`` op and the GRU hot loop on the fused ``gru_cell``
+    kernel (U stationary in VMEM); without one it is the differentiable
+    fake-quant training path.
+    """
     q = cfg.quant
     B, T, F = x.shape
     h = cfg.rnn_hidden
-    x_proj = qdense(x, layer["w"], q)        # (B, T, gates*h)
+    if backend is None:
+        x_proj = qdense(x, layer["w"], q)    # (B, T, gates*h)
+    else:
+        x_proj = _qdense_backend(x, layer["w"], q, backend)
     x_proj = jnp.swapaxes(x_proj, 0, 1)      # (T, B, gates*h)
 
     if cfg.rnn_type == "gru":
-        def step(hs, xp):
-            hn = gru_cell(hs, xp, layer["u"], layer["b"], q)
-            return hn, hn
+        if backend is None:
+            def step(hs, xp):
+                hn = gru_cell(hs, xp, layer["u"], layer["b"], q)
+                return hn, hn
+        else:
+            # recurrent weights on the same b-bit grid the model trained
+            # on (the fused kernel computes h @ u in fp — only the weight
+            # quantization carries over; h itself stays fp per step)
+            fused = backend.op("gru_cell")
+            u_q = fq_weight(layer["u"], q)
+
+            def step(hs, xp):
+                hn = fused(xp, hs, u_q, layer["b"])
+                return hn, hn
         init = jnp.zeros((B, h))
     else:
         def step(hs, xp):
@@ -196,22 +254,34 @@ def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool):
     return jnp.swapaxes(ys, 0, 1)
 
 
-def apply_basecaller(params, signal, cfg: BasecallerConfig):
-    """signal: (B, T, C) -> log-probs (B, T_out, n_classes)."""
+def apply_basecaller(params, signal, cfg: BasecallerConfig,
+                     backend: Optional[Backend] = None):
+    """signal: (B, T, C) -> log-probs (B, T_out, n_classes).
+
+    ``backend`` (a ``repro.kernels.registry.Backend``) switches the whole
+    model onto the registry's accelerated serving path: integer
+    ``quant_matmul`` projections + the fused ``gru_cell`` kernel.  Leave it
+    None for training — the backend path carries no STE gradients.
+    """
     x = signal
     for p, spec in zip(params["conv"], cfg.conv):
-        x = jax.nn.relu(_conv1d(x, p["w"], p["b"], spec.stride, cfg.quant))
+        x = jax.nn.relu(_conv1d(x, p["w"], p["b"], spec.stride, cfg.quant,
+                                per_example=backend is not None))
 
     for i, layer in enumerate(params["rnn"]):
         if cfg.rnn_direction == "bidi":
-            fwd = _run_rnn(x, layer, cfg, reverse=False)
-            bwd = _run_rnn(x, layer, cfg, reverse=True)
+            fwd = _run_rnn(x, layer, cfg, reverse=False, backend=backend)
+            bwd = _run_rnn(x, layer, cfg, reverse=True, backend=backend)
             x = jnp.concatenate([fwd, bwd], axis=-1)
         else:
             reverse = (cfg.rnn_direction == "alt") and (i % 2 == 1)
-            x = _run_rnn(x, layer, cfg, reverse=reverse)
+            x = _run_rnn(x, layer, cfg, reverse=reverse, backend=backend)
 
-    logits = qdense(x, params["fc"]["w"], cfg.quant, params["fc"]["b"])
+    if backend is None:
+        logits = qdense(x, params["fc"]["w"], cfg.quant, params["fc"]["b"])
+    else:
+        logits = _qdense_backend(x, params["fc"]["w"], cfg.quant, backend,
+                                 params["fc"]["b"])
     return jax.nn.log_softmax(logits, axis=-1)
 
 

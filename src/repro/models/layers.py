@@ -364,12 +364,24 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 
 
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
-                     v_cache: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+                     v_cache: jnp.ndarray, valid: jnp.ndarray,
+                     backend=None) -> jnp.ndarray:
     """Single-token attention over a cache.
 
     q: (B, 1, H, D); caches: (B, L, Kv, D); valid: (B, L) bool slot mask.
+
+    ``backend`` (a ``repro.kernels.registry.Backend``) routes onto the
+    tiled ``decode_attn`` Pallas kernel.  The kernel models validity as a
+    per-lane count, so it only applies when ``valid`` is a prefix mask
+    (every caller here builds it as ``arange(L) < n``).
     """
     B, _, H, D = q.shape
+    if backend is not None:
+        Kv = k_cache.shape[2]
+        n_valid = valid.sum(-1).astype(jnp.int32)
+        out = backend.op("decode_attn")(q[:, 0], k_cache, v_cache, n_valid,
+                                        groups=H // Kv)
+        return out[:, None].astype(q.dtype)
     Kv = k_cache.shape[2]
     G = H // Kv
     qf = q.reshape(B, Kv, G, D).astype(jnp.float32) * (D ** -0.5)

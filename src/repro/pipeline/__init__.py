@@ -1,0 +1,7 @@
+"""Unified base-calling pipeline API (see ``pipeline.BasecallPipeline``)."""
+from repro.pipeline.chunking import ChunkConfig, chunk_signal, stitch_reads
+from repro.pipeline.pipeline import BasecallPipeline, BasecallResult
+from repro.pipeline.training import PhasedTrainer, TrainPolicy
+
+__all__ = ["BasecallPipeline", "BasecallResult", "ChunkConfig",
+           "PhasedTrainer", "TrainPolicy", "chunk_signal", "stitch_reads"]

@@ -1,0 +1,69 @@
+"""Window chunking + read stitching for arbitrarily long raw-signal reads.
+
+A nanopore read is minutes of current samples; the base-caller consumes
+fixed windows (paper: 300 x 1).  ``chunk_signal`` slices a long read into
+overlapping windows on the host (data prep, not a hot loop — the hot loop
+is the batched model/decode over the resulting array), and
+``stitch_reads`` votes the per-window reads back into one consensus via
+the longest-match alignment of ``core.voting`` (paper §4.3/Fig 19 — the
+window order is known, consecutive windows overlap).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import voting as voting_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkConfig:
+    window: int            # samples the model consumes per call
+    hop: int               # window start stride; hop < window => overlap
+    batch_windows: int = 8  # windows batched per device call (memory bound)
+
+    def __post_init__(self):
+        if not (0 < self.hop <= self.window):
+            raise ValueError(
+                f"hop must be in (0, window]; got hop={self.hop} "
+                f"window={self.window}")
+
+
+def n_windows(n_samples: int, cfg: ChunkConfig) -> int:
+    """Windows covering ``n_samples`` (final partial window zero-padded)."""
+    if n_samples <= cfg.window:
+        return 1
+    return 1 + -(-(n_samples - cfg.window) // cfg.hop)
+
+
+def chunk_signal(signal: np.ndarray, cfg: ChunkConfig) -> np.ndarray:
+    """(T,) or (T, C) raw read -> (n_windows, window, C) float32.
+
+    The tail window is zero-padded — the pore signal is standardized to
+    zero mean so padding is inert rather than a level step.
+    """
+    sig = np.asarray(signal, np.float32)
+    if sig.ndim == 1:
+        sig = sig[:, None]
+    T, C = sig.shape
+    N = n_windows(T, cfg)
+    out = np.zeros((N, cfg.window, C), np.float32)
+    for i in range(N):
+        s = i * cfg.hop
+        piece = sig[s: s + cfg.window]
+        out[i, : piece.shape[0]] = piece
+    return out
+
+
+def stitch_reads(reads: jnp.ndarray, lengths: jnp.ndarray,
+                 span: int | None = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Vote per-window reads (N, L) back into one consensus read.
+
+    Thin alias over ``core.voting.vote`` so the pipeline has a single
+    stitching entry point.  Returns (consensus (span,) padded -1, length).
+    """
+    return voting_lib.vote(reads, lengths, span=span)

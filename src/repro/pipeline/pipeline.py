@@ -1,0 +1,245 @@
+"""``BasecallPipeline`` — the one facade over the Helix base-calling path.
+
+The paper's end-to-end claim is about the *whole* pipeline: quantized DNN
+inference, CTC decode, and read voting as one accelerated path.  This
+class wires those stages together once, so callers stop re-plumbing
+model -> ``ctc_beam_search_batch`` -> ``consensus_reads`` by hand:
+
+    pipe = BasecallPipeline.from_preset("guppy",
+                                        quant=QuantConfig(enabled=True),
+                                        backend="auto")
+    params = pipe.init_params(jax.random.PRNGKey(0))
+    result = pipe.basecall(long_raw_signal)          # chunk/batch/decode/vote
+
+Compute routes through ``repro.kernels.registry``: the ``backend`` switch
+("auto" | "pallas" | "interpret" | "ref") picks the integer Pallas serving
+path or the jnp oracle for every matmul/GRU step in one place.
+
+Three call surfaces:
+  basecall(signal)        — arbitrarily long raw read: overlapping windows,
+                            batched model + CTC beam decode, voted consensus
+  basecall_iter(signal)   — same, streaming one window-batch at a time
+                            (bounded device memory for very long reads)
+  basecall_windows(batch) — fixed (B, window+2*margin) signal windows through
+                            the fused SEAT-view + consensus serving path
+                            (what the serving engine batches over slots)
+plus ``trainer()`` — the warm-up/SEAT two-phase policy (pipeline/training).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ctc as ctc_lib
+from repro.core import seat as seat_lib
+from repro.core.quant import QuantConfig
+from repro.data import genome
+from repro.kernels.registry import Backend
+from repro.models import basecaller as bc
+from repro.pipeline import chunking
+from repro.pipeline.training import PhasedTrainer, TrainPolicy
+
+_SCALES = {"full": lambda n: bc.PRESETS[n], "demo": bc.demo_preset,
+           "tiny": bc.tiny_preset}
+
+
+@dataclasses.dataclass
+class BasecallResult:
+    """One long read's consensus + the per-window reads that voted it."""
+    read: np.ndarray            # (span,) int32 base ids, padded -1
+    length: int
+    window_reads: np.ndarray    # (n_windows, max_read_len)
+    window_lengths: np.ndarray  # (n_windows,)
+
+    def sequence(self, alphabet: str = "ACGT") -> str:
+        return "".join(alphabet[b] for b in self.read[: self.length])
+
+
+class BasecallPipeline:
+    def __init__(self, mcfg: bc.BasecallerConfig, *,
+                 backend: str | Backend = "auto",
+                 scfg: Optional[seat_lib.SEATConfig] = None,
+                 chunk: Optional[chunking.ChunkConfig] = None,
+                 beam_width: int = 5,
+                 max_read_len: Optional[int] = None,
+                 params=None):
+        self.mcfg = mcfg
+        self.backend = (backend if isinstance(backend, Backend)
+                        else Backend(backend))
+        self.scfg = scfg or seat_lib.SEATConfig(
+            n_views=3, view_stride=8, max_read_len=mcfg.output_len,
+            consensus_span=2 * mcfg.output_len)
+        self.chunk = chunk or chunking.ChunkConfig(
+            window=mcfg.input_len, hop=max(1, mcfg.input_len // 2))
+        if self.chunk.window != mcfg.input_len:
+            raise ValueError(
+                f"chunk window {self.chunk.window} != model input_len "
+                f"{mcfg.input_len}")
+        self.beam_width = beam_width
+        self.max_read_len = max_read_len or mcfg.output_len
+        self.params = params
+        self._trainer: Optional[PhasedTrainer] = None
+        if mcfg.rnn_type == "lstm" and self.backend.mode != "ref":
+            warnings.warn(
+                "LSTM stacks have no fused kernel: the recurrent loop runs "
+                "on the fake-quant path; only projections use the integer "
+                f"backend ({self.backend.mode}).", stacklevel=2)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_preset(cls, name: str, *, quant: Optional[QuantConfig] = None,
+                    backend: str | Backend = "auto", scale: str = "demo",
+                    **kw) -> "BasecallPipeline":
+        """Pipeline for a paper preset ("guppy"/"scrappie"/"chiron").
+
+        ``scale``: "full" (Table 3 structure), "demo" (CPU-trainable), or
+        "tiny" (unit-test widths).
+        """
+        if name not in bc.PRESETS:
+            raise KeyError(f"unknown preset {name!r}; "
+                           f"one of {sorted(bc.PRESETS)}")
+        if scale not in _SCALES:
+            raise KeyError(f"unknown scale {scale!r}; "
+                           f"one of {sorted(_SCALES)}")
+        mcfg = _SCALES[scale](name)
+        if quant is not None:
+            mcfg = mcfg.with_quant(quant)
+        return cls(mcfg, backend=backend, **kw)
+
+    def init_params(self, key):
+        self.params = bc.init_basecaller(key, self.mcfg)
+        return self.params
+
+    def data_config(self, *, kmer: int = 1, mean_dwell: float = 6.0,
+                    max_label_len: Optional[int] = None
+                    ) -> genome.SignalConfig:
+        """Synthetic-channel config matching this model's window/margins."""
+        return genome.SignalConfig(
+            window=self.mcfg.input_len, margin=self.scfg.margin,
+            max_label_len=max_label_len or self.scfg.max_read_len,
+            kmer=kmer, mean_dwell=mean_dwell)
+
+    def _params(self, params):
+        p = params if params is not None else self.params
+        if p is None:
+            raise ValueError("no params: pass params= or call init_params()")
+        return p
+
+    # -- jitted stages -----------------------------------------------------
+    @functools.cached_property
+    def _decode_windows(self):
+        """(params, windows (N, window, C)) -> (reads (N, L), lens (N,))."""
+        mcfg, backend = self.mcfg, self.backend
+        W, L = self.beam_width, self.max_read_len
+
+        @jax.jit
+        def fn(params, windows):
+            lps = bc.apply_basecaller(params, windows, mcfg, backend=backend)
+            if W > 1:
+                reads, lens, _ = ctc_lib.ctc_beam_search_batch(
+                    lps, beam_width=W, max_len=L)
+                return reads[:, 0], lens[:, 0]
+            reads, lens = jax.vmap(ctc_lib.ctc_greedy_decode)(lps)
+            reads = reads[:, :L] if reads.shape[1] >= L else jnp.pad(
+                reads, ((0, 0), (0, L - reads.shape[1])), constant_values=-1)
+            return reads, jnp.minimum(lens, L)
+
+        return fn
+
+    @functools.cached_property
+    def _windows_fused(self):
+        """Fused SEAT-view serving path over (B, window+2*margin, C)."""
+        mcfg, scfg, backend = self.mcfg, self.scfg, self.backend
+        W = self.beam_width
+
+        @jax.jit
+        def fn(params, signal):
+            views, center = seat_lib.make_views(signal, scfg)
+            lps = jnp.stack([
+                bc.apply_basecaller(params, v, mcfg, backend=backend)
+                for v in views])
+            C, C_len = seat_lib.consensus_reads(lps, center, scfg)
+            reads, lens, scores = ctc_lib.ctc_beam_search_batch(
+                lps[center], beam_width=W, max_len=scfg.max_read_len)
+            return C, C_len, reads[:, 0], lens[:, 0], scores[:, 0]
+
+        return fn
+
+    # -- long-read base-calling --------------------------------------------
+    def basecall_iter(self, signal, params=None
+                      ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """Stream (window_reads, window_lengths) one window-batch at a time.
+
+        Device memory is bounded by ``chunk.batch_windows`` windows
+        regardless of read length; the final partial batch is padded to
+        the batch shape (one compiled program) and trimmed on host.
+        """
+        params = self._params(params)
+        windows = chunking.chunk_signal(signal, self.chunk)
+        N = windows.shape[0]
+        B = self.chunk.batch_windows
+        for s in range(0, N, B):
+            grp = windows[s: s + B]
+            n = grp.shape[0]
+            if n < B:
+                grp = np.concatenate(
+                    [grp, np.zeros((B - n,) + grp.shape[1:], grp.dtype)])
+            reads, lens = self._decode_windows(params, jnp.asarray(grp))
+            yield np.asarray(reads[:n]), np.asarray(lens[:n])
+
+    def basecall(self, signal, params=None,
+                 span: Optional[int] = None) -> BasecallResult:
+        """Base-call one arbitrarily long raw read end to end.
+
+        Chunks into overlapping windows, batches them through the
+        quantized model + CTC beam decode, and votes the per-window reads
+        into a consensus aligned by their longest matches.
+        """
+        reads, lens = [], []
+        for r, l in self.basecall_iter(signal, params):
+            reads.append(r)
+            lens.append(l)
+        reads = np.concatenate(reads)
+        lens = np.concatenate(lens)
+        if reads.shape[0] == 1:
+            cons, clen = reads[0], int(lens[0])
+        else:
+            span = span or self.max_read_len * reads.shape[0]
+            cons, clen = chunking.stitch_reads(
+                jnp.asarray(reads), jnp.asarray(lens), span=span)
+            cons, clen = np.asarray(cons), int(clen)
+        return BasecallResult(read=cons, length=clen, window_reads=reads,
+                              window_lengths=lens)
+
+    # -- fixed-window serving ----------------------------------------------
+    def basecall_windows(self, signal_batch, params=None):
+        """(B, window+2*margin, C) signal windows -> fused serving outputs.
+
+        Returns (consensus (B, L), consensus_len (B,), top_read (B, L'),
+        top_len (B,), top_score (B,)) — the SEAT 3-view vote next to the
+        center view's best beam, all in one jitted call.
+        """
+        return self._windows_fused(self._params(params),
+                                   jnp.asarray(signal_batch))
+
+    # -- training ----------------------------------------------------------
+    def trainer(self, policy: Optional[TrainPolicy] = None,
+                opt=None) -> PhasedTrainer:
+        """The warm-up + SEAT phase policy for THIS model's training path
+        (fake-quant STE — never the integer serving backend)."""
+        if self._trainer is None or policy is not None or opt is not None:
+            mcfg = self.mcfg
+            self._trainer = PhasedTrainer(
+                lambda p, s: bc.apply_basecaller(p, s, mcfg),
+                self.scfg, policy or TrainPolicy(), opt)
+        return self._trainer
+
+    def train_step(self, params, opt_state, batch, step: int):
+        """One policy-scheduled update (see ``pipeline.training``)."""
+        return self.trainer().step(params, opt_state, batch, step)

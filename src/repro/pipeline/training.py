@@ -1,0 +1,85 @@
+"""Two-phase base-caller training as a policy object.
+
+The paper's own observation (§4.1/Fig 10): "when the read error rate is
+high, it is faster to improve the quality of each read independently" —
+so training warms up on the plain CTC loss and only then enables SEAT's
+consensus term.  ``TrainPolicy`` owns that schedule; ``PhasedTrainer``
+compiles ONE jitted step per phase and picks by step index, replacing the
+hand-rolled two-phase loop the quickstart used to carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import seat as seat_lib
+from repro.train.optimizer import AdamW, warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPolicy:
+    """Phase schedule: [0, warmup_steps) plain CTC, then SEAT."""
+    warmup_steps: int = 220
+    seat_steps: int = 80
+    lr: float = 4e-3
+    lr_warmup: int = 15
+
+    @property
+    def total_steps(self) -> int:
+        return self.warmup_steps + self.seat_steps
+
+    def phase(self, step: int) -> str:
+        return "warmup" if step < self.warmup_steps else "seat"
+
+    def make_optimizer(self) -> AdamW:
+        return AdamW(lr=warmup_cosine(self.lr, self.lr_warmup,
+                                      self.total_steps))
+
+
+class PhasedTrainer:
+    """Jitted warm/SEAT train steps sharing one optimizer state.
+
+    ``logits_fn(params, signal) -> log-probs`` is the model closure (the
+    pipeline passes the fake-quant training path — never the integer
+    serving backend, which has no STE gradients).
+    """
+
+    def __init__(self, logits_fn: Callable, scfg: seat_lib.SEATConfig,
+                 policy: TrainPolicy, opt: AdamW | None = None):
+        self.policy = policy
+        self.opt = opt or policy.make_optimizer()
+        self._steps = {
+            "warmup": self._make_step(
+                logits_fn, dataclasses.replace(scfg, enabled=False)),
+            "seat": self._make_step(logits_fn, scfg),
+        }
+
+    def init(self, params):
+        return self.opt.init(params)
+
+    def _make_step(self, logits_fn, scfg):
+        opt = self.opt
+
+        @jax.jit
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                fn = lambda s: logits_fn(p, s)  # noqa: E731
+                return seat_lib.seat_loss(fn, batch["signal"],
+                                          batch["labels"],
+                                          batch["label_length"], scfg)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss, metrics
+
+        return train_step
+
+    def step(self, params, opt_state, batch, step: int
+             ) -> Tuple[dict, dict, jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """One phase-appropriate update; returns (params, state, loss, m)."""
+        fn = self._steps[self.policy.phase(step)]
+        return fn(params, opt_state, batch)

@@ -1,0 +1,109 @@
+"""Continuous-batching base-calling engine: long reads in, consensus out.
+
+The LM engine's slot scheduler, reused for signals: a request is one
+arbitrarily long raw-signal read, chunked into overlapping windows at
+admission (``pipeline.chunking``).  Each engine step assembles one
+(B, window, C) batch from every occupied lane's next window, runs the
+pipeline's jitted quantized-DNN + CTC-decode stage ONCE for the whole
+pool, and appends each lane's decoded window read.  A read whose windows
+are exhausted retires immediately — its consensus is voted from the
+accumulated window reads and the slot admits the next queued read, so
+short reads never wait for long ones (iteration-level scheduling, same
+policy as serve/engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pipeline import chunking
+from repro.pipeline.pipeline import BasecallPipeline, BasecallResult
+from repro.serve.scheduler import SlotScheduler
+
+
+@dataclasses.dataclass
+class ReadRequest:
+    rid: int
+    signal: np.ndarray                   # (T,) or (T, C) raw samples
+    windows: Optional[np.ndarray] = None  # (N, window, C), set at admission
+    cursor: int = 0
+    reads: List[np.ndarray] = dataclasses.field(default_factory=list)
+    lengths: List[int] = dataclasses.field(default_factory=list)
+    result: Optional[BasecallResult] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class BasecallEngine:
+    def __init__(self, pipeline: BasecallPipeline, params=None,
+                 batch_slots: int = 8):
+        self.pipe = pipeline
+        self.params = params if params is not None else pipeline.params
+        if self.params is None:
+            raise ValueError("BasecallEngine needs initialized params")
+        self.B = batch_slots
+        self.sched: SlotScheduler[ReadRequest] = SlotScheduler(batch_slots)
+        ck = pipeline.chunk
+        self._zero = np.zeros((ck.window, pipeline.mcfg.in_channels),
+                              np.float32)
+        self.steps = 0
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: ReadRequest):
+        self.sched.submit(req)
+
+    def _admit_one(self, slot: int, req: ReadRequest):
+        req.windows = chunking.chunk_signal(req.signal, self.pipe.chunk)
+        req.cursor = 0
+
+    def _admit(self):
+        self.sched.admit(self._admit_one)
+
+    # -- stepping ----------------------------------------------------------
+    def active_mask(self) -> np.ndarray:
+        return self.sched.active_mask()
+
+    def step(self):
+        """Decode one window for every occupied lane in a single batch."""
+        batch = np.stack([
+            r.windows[r.cursor] if r is not None else self._zero
+            for r in self.sched.slots])
+        reads, lens = self.pipe._decode_windows(self.params,
+                                                jnp.asarray(batch))
+        reads, lens = np.asarray(reads), np.asarray(lens)
+        self.steps += 1
+        for slot, req in enumerate(self.sched.slots):
+            if req is None:
+                continue
+            req.reads.append(reads[slot])
+            req.lengths.append(int(lens[slot]))
+            req.cursor += 1
+            if req.cursor >= req.windows.shape[0]:
+                self._finalize(req)
+                self.sched.retire(slot, req.rid)
+
+    def _finalize(self, req: ReadRequest):
+        reads = np.stack(req.reads)
+        lens = np.asarray(req.lengths, np.int32)
+        if reads.shape[0] == 1:
+            cons, clen = reads[0], int(lens[0])
+        else:
+            span = self.pipe.max_read_len * reads.shape[0]
+            cons, clen = chunking.stitch_reads(
+                jnp.asarray(reads), jnp.asarray(lens), span=span)
+            cons, clen = np.asarray(cons), int(clen)
+        req.result = BasecallResult(read=cons, length=clen,
+                                    window_reads=reads, window_lengths=lens)
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, ReadRequest]:
+        while self.sched.pending() and max_steps > 0:
+            self._admit()
+            if self.sched.any_active():
+                self.step()
+            max_steps -= 1
+        return self.sched.finished

@@ -7,6 +7,13 @@ advance — see models/decode.py), every ``step()`` decodes one token for all
 active slots, and finished requests (EOS / max_tokens) retire immediately
 so their slot is reusable — the batch never drains to refill.
 
+Slot/queue bookkeeping lives in ``serve.scheduler.SlotScheduler`` (shared
+with the base-calling engine); this module owns what a step of work means
+for token LMs.  Prompt folding runs as ONE jitted ``lax.scan`` over a
+padded prompt bucket — one device call per admission instead of one per
+prompt token (prompts are padded to the next power of two to bound
+retraces; padded steps carry an all-False active mask, i.e. are no-ops).
+
 This is iteration-level scheduling (Orca-style) on a cache whose per-slot
 positions make lanes fully independent; launch/specs.py's ``decode`` cells
 lower exactly one engine step on the production mesh.
@@ -22,6 +29,7 @@ import numpy as np
 
 from repro.models import decode as decode_lib
 from repro.models import lm as lm_lib
+from repro.serve.scheduler import SlotScheduler
 
 
 @dataclasses.dataclass
@@ -43,9 +51,7 @@ class ServingEngine:
         self.B = batch_slots
         self.max_len = max_len
         self.cache = decode_lib.init_cache(cfg, batch_slots, max_len)
-        self.slot_req: List[Optional[Request]] = [None] * batch_slots
-        self.queue: List[Request] = []
-        self.finished: Dict[int, Request] = {}
+        self.sched: SlotScheduler[Request] = SlotScheduler(batch_slots)
         self.last_token = np.zeros((batch_slots,), np.int32)
         self.steps = 0
 
@@ -65,12 +71,62 @@ class ServingEngine:
 
         self._reset_slot = jax.jit(reset_slot, donate_argnums=(0,))
 
-    # -- admission -------------------------------------------------------------
+        def fold_prompt(params, cache, tokens, valid, slot):
+            """Fold a padded prompt into one lane as a single scan.
+
+            tokens (P,) int32 prompt body; valid (P,) bool marks real
+            entries — padded steps mask the whole batch inactive, which
+            decode_step turns into a pure no-op (no write, no advance).
+            """
+            lane = jnp.zeros((batch_slots,), bool).at[slot].set(True)
+
+            def body(c, tv):
+                tok, v = tv
+                toks = jnp.zeros((batch_slots,), jnp.int32).at[slot].set(tok)
+                _, c = decode_lib.decode_step(params, cfg, c, tokens=toks,
+                                              active=lane & v)
+                return c, None
+
+            cache, _ = jax.lax.scan(body, cache, (tokens, valid))
+            return cache
+
+        self._fold = jax.jit(fold_prompt, donate_argnums=(1,))
+
+    # -- compatibility views over the scheduler ---------------------------
+    @property
+    def queue(self) -> List[Request]:
+        return self.sched.queue
+
+    @property
+    def finished(self) -> Dict[int, Request]:
+        return self.sched.finished
+
+    @property
+    def slot_req(self) -> List[Optional[Request]]:
+        return self.sched.slots
+
+    # -- admission ---------------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
+        self.sched.submit(req)
 
     def _admit_one(self, slot: int, req: Request):
         """Fold the prompt into `slot` while other lanes stay frozen."""
+        self.cache = self._reset_slot(self.cache, slot)
+        body = np.asarray(req.prompt[:-1], np.int32)
+        if body.size:
+            P = 1 << max(int(body.size) - 1, 0).bit_length()
+            toks = np.zeros((P,), np.int32)
+            toks[: body.size] = body
+            valid = np.zeros((P,), bool)
+            valid[: body.size] = True
+            self.cache = self._fold(self.params, self.cache,
+                                    jnp.asarray(toks), jnp.asarray(valid),
+                                    jnp.asarray(slot))
+        self.last_token[slot] = int(req.prompt[-1])
+
+    def _admit_one_unfolded(self, slot: int, req: Request):
+        """Reference admission: one decode_step per prompt token.  Kept as
+        the oracle the folded path is asserted against (tests/test_serve)."""
         self.cache = self._reset_slot(self.cache, slot)
         active = np.zeros((self.B,), bool)
         active[slot] = True
@@ -81,16 +137,13 @@ class ServingEngine:
                                          jnp.asarray(toks),
                                          jnp.asarray(active))
         self.last_token[slot] = int(req.prompt[-1])
-        self.slot_req[slot] = req
 
     def _admit(self):
-        for slot in range(self.B):
-            if self.slot_req[slot] is None and self.queue:
-                self._admit_one(slot, self.queue.pop(0))
+        self.sched.admit(self._admit_one)
 
-    # -- decoding --------------------------------------------------------------
+    # -- decoding -----------------------------------------------------------
     def active_mask(self) -> np.ndarray:
-        return np.asarray([r is not None for r in self.slot_req])
+        return self.sched.active_mask()
 
     def step(self):
         active = self.active_mask()
@@ -99,7 +152,7 @@ class ServingEngine:
                                        jnp.asarray(active))
         nxt = np.asarray(nxt)
         self.steps += 1
-        for slot, req in enumerate(self.slot_req):
+        for slot, req in enumerate(self.sched.slots):
             if req is None:
                 continue
             tok = int(nxt[slot])
@@ -108,13 +161,12 @@ class ServingEngine:
             if ((req.eos_id is not None and tok == req.eos_id)
                     or len(req.out_tokens) >= req.max_tokens):
                 req.done = True
-                self.finished[req.rid] = req
-                self.slot_req[slot] = None
+                self.sched.retire(slot, req.rid)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
-        while (self.queue or any(self.active_mask())) and max_steps > 0:
+        while self.sched.pending() and max_steps > 0:
             self._admit()
-            if any(self.active_mask()):
+            if self.sched.any_active():
                 self.step()
             max_steps -= 1
-        return self.finished
+        return self.sched.finished

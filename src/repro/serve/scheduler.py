@@ -1,0 +1,67 @@
+"""Slot-based continuous-batching core, shared by every serving engine.
+
+Iteration-level (Orca-style) scheduling over a fixed pool of B device
+lanes: requests are admitted into free slots, every engine step advances
+all occupied lanes by one unit of work (a decoded token, a signal window),
+and finished requests retire immediately so their slot is reusable — the
+batch never drains to refill.
+
+This module owns only the BOOKKEEPING (queue, slot table, retirement);
+what a "step of work" means belongs to the engine built on top:
+``serve.engine.ServingEngine`` (LM tokens) and
+``serve.basecall_engine.BasecallEngine`` (signal windows) both drive one
+``SlotScheduler``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Generic, List, Optional, TypeVar
+
+import numpy as np
+
+R = TypeVar("R")
+
+
+class SlotScheduler(Generic[R]):
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.slots: List[Optional[R]] = [None] * n_slots
+        self.queue: List[R] = []
+        self.finished: Dict[int, R] = {}
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: R) -> None:
+        self.queue.append(req)
+
+    def admit(self, admit_fn: Callable[[int, R], None]) -> List[int]:
+        """Fill free slots from the queue; ``admit_fn(slot, req)`` does the
+        engine-specific lane setup.  Returns the slots admitted into."""
+        admitted = []
+        for slot in range(self.n_slots):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                admit_fn(slot, req)
+                self.slots[slot] = req
+                admitted.append(slot)
+        return admitted
+
+    # -- state -------------------------------------------------------------
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([r is not None for r in self.slots])
+
+    def any_active(self) -> bool:
+        return any(r is not None for r in self.slots)
+
+    def pending(self) -> bool:
+        return bool(self.queue) or self.any_active()
+
+    def occupancy(self) -> float:
+        return float(self.active_mask().mean())
+
+    # -- retirement --------------------------------------------------------
+    def retire(self, slot: int, rid: int) -> R:
+        """Free ``slot`` and move its request to ``finished[rid]``."""
+        req = self.slots[slot]
+        assert req is not None, f"retiring empty slot {slot}"
+        self.finished[rid] = req
+        self.slots[slot] = None
+        return req

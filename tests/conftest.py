@@ -1,0 +1,78 @@
+"""Shared test config.
+
+When the real ``hypothesis`` package is unavailable (the CI/container image
+does not ship it and installing deps is out of scope), install a minimal
+deterministic stand-in BEFORE test modules import it: ``@given`` runs the
+test body over a fixed pseudo-random sample of the strategy space
+(``max_examples`` draws, seeded per test name), which keeps the property
+tests meaningful — just without shrinking or adaptive search.
+"""
+from __future__ import annotations
+
+import functools
+import importlib.util
+import random
+import sys
+import types
+
+
+def _install_hypothesis_fallback() -> None:
+    mod = types.ModuleType("hypothesis")
+    strategies = types.ModuleType("hypothesis.strategies")
+
+    class _Integers:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng: random.Random) -> int:
+            return rng.randint(self.lo, self.hi)
+
+    class _SampledFrom:
+        def __init__(self, options):
+            self.options = list(options)
+
+        def sample(self, rng: random.Random):
+            return rng.choice(self.options)
+
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+    def sampled_from(options) -> _SampledFrom:
+        return _SampledFrom(options)
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 10)
+                rng = random.Random(fn.__qualname__)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng)
+                             for k, s in strategy_kwargs.items()}
+                    fn(*args, **drawn, **kwargs)
+            # keep the test's name/docs but NOT its signature — pytest
+            # must not mistake the strategy params for fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+        return deco
+
+    strategies.integers = integers
+    strategies.sampled_from = sampled_from
+    mod.strategies = strategies
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+if importlib.util.find_spec("hypothesis") is None:
+    _install_hypothesis_fallback()

@@ -37,6 +37,8 @@ for L in (2, 8):
                     ).lower(xs, wss).compile()
         la = loop_aware_cost(c.as_text(), 4)
         rep = c.cost_analysis()
+        if isinstance(rep, (list, tuple)):   # older jax: list of one dict
+            rep = rep[0]
         out[f"{L}_{use_scan}"] = {"la_flops": la[0], "la_bytes": la[1],
                                   "xla_flops": float(rep["flops"])}
 

@@ -21,8 +21,10 @@ from repro.train import checkpoint as ckpt_lib
 from repro.dist import sharding as shd
 
 def mesh(shape):
-    return jax.make_mesh(shape, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):   # absent on older jax
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh(shape, ("data", "model"), **kw)
 
 tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
         "b": jnp.linspace(0, 1, 8)}

@@ -1,0 +1,213 @@
+"""BasecallPipeline acceptance: chunk/stitch correctness, backend parity,
+streaming equivalence, the phased trainer, and the base-calling engine."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ctc as ctc_lib
+from repro.core import voting as voting_lib
+from repro.core.quant import QuantConfig
+from repro.data import genome
+from repro.kernels.registry import Backend
+from repro.models import basecaller as bc
+from repro.pipeline import (BasecallPipeline, ChunkConfig, TrainPolicy,
+                            chunk_signal)
+from repro.serve.basecall_engine import BasecallEngine, ReadRequest
+
+jax.config.update("jax_platform_name", "cpu")
+
+QUANT = QuantConfig(enabled=True, bits_w=5, bits_a=5)
+
+
+def _pipe(backend="ref", **kw):
+    pipe = BasecallPipeline.from_preset("guppy", scale="tiny", quant=QUANT,
+                                        backend=backend, beam_width=3, **kw)
+    pipe.init_params(jax.random.PRNGKey(0))
+    return pipe
+
+
+def _long_signal(n_samples, seed=0):
+    return np.random.default_rng(seed).standard_normal(
+        n_samples).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# (a) chunked + stitched basecall == the windowed reference path
+# ---------------------------------------------------------------------------
+
+def test_basecall_matches_windowed_reference():
+    pipe = _pipe()
+    sig = _long_signal(3 * pipe.mcfg.input_len + 17)
+    got = pipe.basecall(sig)
+
+    # reference: window by hand, run model + beam decode + vote directly
+    windows = chunk_signal(sig, pipe.chunk)
+    lps = bc.apply_basecaller(pipe.params, jnp.asarray(windows), pipe.mcfg,
+                              backend=Backend("ref"))
+    reads, lens, _ = ctc_lib.ctc_beam_search_batch(
+        lps, beam_width=pipe.beam_width, max_len=pipe.max_read_len)
+    reads, lens = reads[:, 0], lens[:, 0]
+    span = pipe.max_read_len * windows.shape[0]
+    cons, clen = voting_lib.vote(reads, lens, span=span)
+
+    np.testing.assert_array_equal(got.window_reads, np.asarray(reads))
+    np.testing.assert_array_equal(got.window_lengths, np.asarray(lens))
+    assert got.length == int(clen)
+    np.testing.assert_array_equal(got.read[: got.length],
+                                  np.asarray(cons[: clen]))
+
+
+def test_basecall_single_window_read():
+    pipe = _pipe()
+    sig = _long_signal(pipe.mcfg.input_len - 9, seed=3)  # shorter than window
+    res = pipe.basecall(sig)
+    assert res.window_reads.shape[0] == 1
+    assert res.length == int(res.window_lengths[0])
+
+
+# ---------------------------------------------------------------------------
+# (b) backend="ref" and backend="interpret" pipelines agree
+# ---------------------------------------------------------------------------
+
+def test_ref_and_interpret_backends_agree():
+    sig = _long_signal(2 * 120 + 31, seed=1)
+    ref = _pipe("ref")
+    interp = BasecallPipeline(ref.mcfg, backend="interpret",
+                              scfg=ref.scfg, chunk=ref.chunk,
+                              beam_width=ref.beam_width, params=ref.params)
+    a = ref.basecall(sig)
+    b = interp.basecall(sig)
+    np.testing.assert_array_equal(a.window_lengths, b.window_lengths)
+    np.testing.assert_array_equal(a.window_reads, b.window_reads)
+    assert a.length == b.length
+    np.testing.assert_array_equal(a.read[: a.length], b.read[: b.length])
+
+
+def test_fused_window_path_backend_parity():
+    ref = _pipe("ref")
+    interp = BasecallPipeline(ref.mcfg, backend="interpret", scfg=ref.scfg,
+                              beam_width=ref.beam_width, params=ref.params)
+    dcfg = ref.data_config(max_label_len=24)
+    batch = genome.batch_for_step(0, 3, dcfg)
+    Ca, La, ra, la, sa = ref.basecall_windows(batch["signal"])
+    Cb, Lb, rb, lb, sb = interp.basecall_windows(batch["signal"])
+    np.testing.assert_array_equal(np.asarray(Ca), np.asarray(Cb))
+    np.testing.assert_array_equal(np.asarray(La), np.asarray(Lb))
+    np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(sb), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# streaming + chunking mechanics
+# ---------------------------------------------------------------------------
+
+def test_basecall_iter_streams_same_reads_in_bounded_batches():
+    pipe = _pipe(chunk=ChunkConfig(window=120, hop=60, batch_windows=2))
+    sig = _long_signal(5 * 120, seed=2)
+    got = pipe.basecall(sig)
+    batches = list(pipe.basecall_iter(sig))
+    assert all(r.shape[0] <= 2 for r, _ in batches)
+    streamed = np.concatenate([r for r, _ in batches])
+    np.testing.assert_array_equal(streamed, got.window_reads)
+
+
+def test_chunk_signal_covers_and_overlaps():
+    cfg = ChunkConfig(window=100, hop=40)
+    sig = np.arange(250, dtype=np.float32)
+    w = chunk_signal(sig, cfg)
+    assert w.shape == (5, 100, 1)
+    np.testing.assert_array_equal(w[0, :, 0], sig[:100])
+    np.testing.assert_array_equal(w[1, :60, 0], w[0, 40:, 0])  # overlap
+    np.testing.assert_array_equal(w[4, :90, 0], sig[160:])     # tail window
+    assert np.all(w[4, 90:] == 0)                              # tail pad
+
+
+def test_chunk_config_validates_hop():
+    with pytest.raises(ValueError):
+        ChunkConfig(window=100, hop=0)
+    with pytest.raises(ValueError):
+        ChunkConfig(window=100, hop=101)
+
+
+# ---------------------------------------------------------------------------
+# construction + training policy
+# ---------------------------------------------------------------------------
+
+def test_from_preset_validates_names():
+    with pytest.raises(KeyError):
+        BasecallPipeline.from_preset("bonito")
+    with pytest.raises(KeyError):
+        BasecallPipeline.from_preset("guppy", scale="huge")
+
+
+def test_train_policy_phases_and_step():
+    policy = TrainPolicy(warmup_steps=2, seat_steps=2, lr=1e-3)
+    assert policy.phase(0) == "warmup" and policy.phase(2) == "seat"
+    pipe = _pipe()
+    trainer = pipe.trainer(policy)
+    dcfg = pipe.data_config(max_label_len=24)
+    batch = genome.batch_for_step(0, 2, dcfg)
+    params, state = pipe.params, trainer.init(pipe.params)
+    losses = []
+    for step in range(policy.total_steps):
+        params, state, loss, m = pipe.train_step(params, state, batch, step)
+        losses.append(float(loss))
+        assert np.isfinite(losses[-1])
+    # SEAT phase adds the consensus term: metrics grow the gap entry
+    assert float(m["consensus_gap"]) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching engine
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_pipeline_per_read():
+    pipe = _pipe()
+    sigs = [_long_signal(n, seed=10 + i)
+            for i, n in enumerate((130, 470, 120))]
+    eng = BasecallEngine(pipe, batch_slots=2)
+    for i, s in enumerate(sigs):
+        eng.submit(ReadRequest(rid=i, signal=s))
+    done = eng.run()
+    assert sorted(done) == [0, 1, 2]
+    for i, s in enumerate(sigs):
+        want = pipe.basecall(s)
+        got = done[i].result
+        assert got.length == want.length, f"read {i}"
+        np.testing.assert_array_equal(got.read[: got.length],
+                                      want.read[: want.length])
+
+
+def test_engine_retires_short_reads_early():
+    pipe = _pipe()
+    eng = BasecallEngine(pipe, batch_slots=1)
+    eng.submit(ReadRequest(rid=0, signal=_long_signal(120)))      # 1 window
+    eng.submit(ReadRequest(rid=1, signal=_long_signal(60 * 7)))   # many
+    done = eng.run()
+    n0 = done[0].windows.shape[0]
+    n1 = done[1].windows.shape[0]
+    assert n0 == 1 and n1 > 1
+    assert eng.steps == n0 + n1   # one slot: pure sequential window count
+
+
+def test_engine_handles_multichannel_signals():
+    """Idle-lane filler must match the model's channel count."""
+    mcfg = dataclasses.replace(BasecallPipeline.from_preset(
+        "guppy", scale="tiny").mcfg, in_channels=2, quant=QUANT)
+    pipe = BasecallPipeline(mcfg, backend="ref", beam_width=2)
+    pipe.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    eng = BasecallEngine(pipe, batch_slots=2)   # 2 slots, 1 request: one idle
+    sig = rng.standard_normal((200, 2)).astype(np.float32)
+    eng.submit(ReadRequest(rid=0, signal=sig))
+    done = eng.run()
+    assert done[0].result is not None and done[0].result.length >= 0
+
+
+def test_lstm_backend_warns_partial_acceleration():
+    with pytest.warns(UserWarning, match="LSTM"):
+        BasecallPipeline.from_preset("chiron", scale="tiny",
+                                     backend="interpret")

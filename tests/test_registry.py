@@ -1,0 +1,170 @@
+"""Kernel backend registry: ref ≡ interpret parity sweep + dispatch rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import registry
+
+jax.config.update("jax_platform_name", "cpu")
+
+RAGGED = 0  # marker: every shape below is deliberately non-tile-multiple
+
+
+def _quant_matmul_args(rng):
+    M, K, N = 37, 100, 51                       # ragged vs 128 tiles
+    xq = jnp.asarray(rng.integers(-15, 16, (M, K)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-15, 16, (K, N)), jnp.int8)
+    sx = jnp.asarray([[0.021]], jnp.float32)
+    sw = jnp.asarray(rng.random((1, N)).astype(np.float32) * 0.05 + 1e-3)
+    return (xq, wq, sx, sw), {}
+
+
+def _gru_cell_args(rng):
+    B, H = 23, 48                                # ragged vs bb=128
+    xp = jnp.asarray(rng.standard_normal((B, 3 * H)).astype(np.float32))
+    h = jnp.asarray(rng.standard_normal((B, H)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((H, 3 * H)).astype(np.float32) * 0.1)
+    b = jnp.asarray(rng.standard_normal((3 * H,)).astype(np.float32) * 0.1)
+    return (xp, h, u, b), {}
+
+
+def _masked_logsumexp_args(rng):
+    B, C = 3, 45                                 # ragged vs bi=128
+    eq = rng.integers(0, 2, (B, C, C))
+    eq |= np.eye(C, dtype=eq.dtype)[None]        # rows self-connected
+    scores = rng.standard_normal((B, C)).astype(np.float32)
+    return (jnp.asarray(eq, jnp.int8), jnp.asarray(scores)), {}
+
+
+def _decode_attn_args(rng):
+    B, L, Kv, G, D = 2, 75, 2, 3, 16             # ragged vs bl=256
+    q = jnp.asarray(rng.standard_normal((B, Kv * G, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, L, Kv, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, L, Kv, D)).astype(np.float32))
+    n_valid = jnp.asarray([31, 75], jnp.int32)
+    return (q, k, v, n_valid), {"groups": G}
+
+
+def _mismatch_bits_args(rng):
+    r1 = jnp.asarray(rng.integers(0, 4, (41,)), jnp.int32)
+    r2 = jnp.asarray(rng.integers(0, 4, (29,)), jnp.int32)
+    return (r1, r2), {"K": 5}
+
+
+_CASES = {
+    "quant_matmul": _quant_matmul_args,
+    "gru_cell": _gru_cell_args,
+    "masked_logsumexp": _masked_logsumexp_args,
+    "decode_attn": _decode_attn_args,
+    "mismatch_bits": _mismatch_bits_args,
+}
+
+
+def test_registry_knows_all_five_ops():
+    assert set(registry.list_ops()) == set(_CASES)
+
+
+@pytest.mark.parametrize("name", sorted(_CASES))
+def test_ref_matches_interpret_on_ragged_shapes(name):
+    """get_op(name, "ref") ≡ get_op(name, "interpret"): the padding done by
+    the Pallas wrapper must be invisible on non-tile-multiple shapes."""
+    rng = np.random.default_rng(hash(name) % 2**31)
+    args, kw = _CASES[name](rng)
+    ref = registry.get_op(name, "ref")(*args, **kw)
+    interp = registry.get_op(name, "interpret")(*args, **kw)
+    assert ref.shape == interp.shape, name
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(interp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_unknown_op_suggests_nearest():
+    with pytest.raises(KeyError, match="quant_matmul"):
+        registry.get_op("quant_matmui")
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError):
+        registry.get_op("gru_cell", "cuda")
+    with pytest.raises(ValueError):
+        registry.Backend("cuda")
+
+
+def test_backend_auto_resolves_off_tpu_to_interpret():
+    assert registry.Backend("auto").resolved in ("interpret", "pallas")
+    assert registry.resolve_backend("ref") == "ref"
+
+
+def test_default_backend_rebinding():
+    registry.set_default_backend("ref")
+    try:
+        assert registry.resolve_backend(None) == "ref"
+        assert registry.resolve_backend("auto") == "ref"
+        assert registry.resolve_backend("interpret") == "interpret"
+    finally:
+        registry.set_default_backend("auto")
+
+
+def test_public_wrappers_resolve_exclusively_through_registry():
+    """Re-registering an op must intercept the public ops.py wrapper —
+    proof there is no residual per-op dispatch path."""
+    from repro.kernels.gru_cell import ops as gru_ops
+
+    entry = registry._REGISTRY["gru_cell"]
+    seen = []
+
+    def fake_ref(x_proj, h, u, b, **kw):
+        seen.append(x_proj.shape)
+        return entry.ref(x_proj, h, u, b, **kw)
+
+    registry.register_op("gru_cell", ref=fake_ref, pallas=entry.pallas)
+    try:
+        rng = np.random.default_rng(0)
+        # unique shape so the wrapper's jit cache cannot serve a stale trace
+        (xp, h, u, b), _ = _gru_cell_args(rng)
+        xp, h = xp[:11], h[:11]
+        out = gru_ops.gru_cell(xp, h, u, b, backend="ref")
+        assert seen, "wrapper did not route through the registry"
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(entry.ref(xp, h, u, b)),
+            rtol=1e-5, atol=1e-6)
+    finally:
+        registry.register_op("gru_cell", ref=entry.ref, pallas=entry.pallas)
+
+
+def test_old_auto_interpret_helpers_are_gone():
+    """The five copy-pasted per-op ``_auto_interpret`` dispatchers are gone;
+    backend choice lives in the registry alone."""
+    import repro.kernels.ctc_merge.ops as m1
+    import repro.kernels.decode_attn.ops as m2
+    import repro.kernels.gru_cell.ops as m3
+    import repro.kernels.quant_matmul.ops as m4
+    import repro.kernels.vote_cmp.ops as m5
+    for mod in (m1, m2, m3, m4, m5):
+        assert not hasattr(mod, "_auto_interpret"), mod.__name__
+
+
+def test_default_backend_takes_effect_after_prior_trace():
+    """Rebinding the default must not be defeated by a stale jit cache:
+    the wrapper resolves the backend BEFORE its jit boundary."""
+    from repro.kernels.gru_cell import ops as gru_ops
+
+    rng = np.random.default_rng(7)
+    (xp, h, u, b), _ = _gru_cell_args(rng)
+    _ = gru_ops.gru_cell(xp, h, u, b)          # traces under the default
+
+    entry = registry._REGISTRY["gru_cell"]
+    calls = []
+
+    def spy_ref(x_proj, hh, uu, bb_, **kw):
+        calls.append("ref")
+        return entry.ref(x_proj, hh, uu, bb_, **kw)
+
+    registry.register_op("gru_cell", ref=spy_ref, pallas=entry.pallas)
+    registry.set_default_backend("ref")
+    try:
+        _ = gru_ops.gru_cell(xp, h, u, b)      # SAME shapes as before
+        assert calls == ["ref"], "stale trace served instead of new default"
+    finally:
+        registry.set_default_backend("auto")
+        registry.register_op("gru_cell", ref=entry.ref, pallas=entry.pallas)
