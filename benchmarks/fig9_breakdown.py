@@ -28,8 +28,10 @@ def run():
     lp = dnn(params, batch["signal"])
     t_dnn = time_call(dnn, params, batch["signal"])
 
-    beam = jax.jit(functools.partial(ctc_lib.ctc_beam_search_batch,
-                                     beam_width=10, max_len=48))
+    # the serving decoder (hash-merge; compiled merge path — see fig26)
+    beam = jax.jit(functools.partial(ctc_lib.ctc_beam_search_hash_batch,
+                                     beam_width=10, max_len=48,
+                                     backend="ref"))
     reads, lens, _ = beam(lp)
     t_ctc = time_call(beam, lp)
 

@@ -253,3 +253,178 @@ def ctc_beam_search_batch(log_probs, beam_width=10, blank=-1, max_len=None,
                                max_len=max_len, logit_length=ll)
 
     return jax.vmap(one)(log_probs, logit_lengths)
+
+
+# ---------------------------------------------------------------------------
+# hash-merge CTC prefix beam search (the serving decoder)
+# ---------------------------------------------------------------------------
+#
+# The dense decoder above materializes an O(C^2 * L) prefix-equality tensor
+# per frame (C = W * A candidates) — beam width and read length blow up
+# quadratically, and only the logsumexp tail is accelerated.  The serving
+# decoder instead identifies every candidate by a 32-bit ROLLING PREFIX
+# HASH:
+#
+#     h(empty) = 0;   h(prefix + c) = h(prefix) * M + (c + 1)   (mod 2^32)
+#
+# with M odd, so duplicate detection is single-word integer compares and
+# the whole per-frame beam update — merge duplicate candidates, pool their
+# log-mass, pick the top W — is ONE fused ``beam_merge_topk`` op from
+# ``repro.kernels.registry`` (ref / interpret / Pallas backends).
+#
+# Invariants the hash state maintains (see ARCHITECTURE.md):
+#   * after every frame the W live beams carry distinct prefixes, so the
+#     only duplicates among the W*(1+nsym) candidates are structural:
+#     extend(beam_i, c) colliding with stay(beam_j) where P_j = P_i + c —
+#     exactly what the key-equality merge pools;
+#   * hash identity == prefix identity up to 32-bit collisions
+#     (probability ~ C^2 * T / 2^33 per read — negligible, and the dense
+#     decoder stays available as the exact oracle);
+#   * dead lanes (score ~ NEG) may carry stale prefixes; their mass
+#     underflows to zero in every merge, so they never influence a live
+#     beam.
+
+_HASH_MUL = jnp.uint32(2654435761)  # Knuth's multiplicative constant (odd)
+
+
+def prefix_hash_extend(h: jnp.ndarray, sym: jnp.ndarray) -> jnp.ndarray:
+    """Rolling prefix hash update: h' = h * M + (sym + 1) (mod 2^32)."""
+    return h * _HASH_MUL + (sym.astype(jnp.uint32) + jnp.uint32(1))
+
+
+def ctc_beam_search_hash_batch(log_probs, beam_width: int = 10,
+                               blank: int = -1, max_len: int | None = None,
+                               logit_lengths=None, backend=None
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
+    """Batched hash-merge prefix beam search over (B, T, A) log-probs.
+
+    Natively batched (no vmap): the whole pool advances one frame per
+    fused merge/top-k call, which is what the serving engine batches over
+    slots.  ``logit_lengths`` (B,) masks padded tail frames per example —
+    frames at/after an example's length leave its beam state untouched.
+
+    ``backend`` is a registry backend name or ``repro.kernels.registry
+    .Backend`` ("auto"/"pallas"/"interpret"/"ref") for the fused op.
+
+    Returns (prefixes (B, W, max_len) padded -1, lengths (B, W),
+    scores (B, W)), each example sorted by score descending.
+    """
+    from repro.kernels import registry as _registry
+
+    B, T, A = log_probs.shape
+    if blank < 0:
+        blank = A + blank
+    if max_len is None:
+        max_len = T
+    if logit_lengths is None:
+        logit_lengths = jnp.full((B,), T, jnp.int32)
+    logit_lengths = jnp.asarray(logit_lengths, jnp.int32)
+    W = beam_width
+    nsym = A - 1
+    sym_ids = jnp.array([c for c in range(A) if c != blank], jnp.int32)
+    L = max_len
+
+    mode = backend.mode if isinstance(backend, _registry.Backend) else backend
+    merge_topk = _registry.get_op("beam_merge_topk", mode)
+
+    prefixes = jnp.full((B, W, L), -1, jnp.int32)
+    lengths = jnp.zeros((B, W), jnp.int32)
+    hashes = jnp.zeros((B, W), jnp.uint32)
+    p_b = jnp.full((B, W), NEG).at[:, 0].set(0.0)
+    p_nb = jnp.full((B, W), NEG)
+
+    def step(state, inp):
+        prefixes, lengths, hashes, p_b, p_nb = state
+        lp, t = inp                                    # lp (B, A)
+        active = t < logit_lengths                     # (B,)
+
+        last = jnp.where(
+            lengths > 0,
+            jnp.take_along_axis(
+                prefixes, jnp.maximum(lengths - 1, 0)[:, :, None],
+                axis=2)[:, :, 0],
+            -1)                                        # (B, W)
+        tot = _lse2(p_b, p_nb)
+
+        # --- stay candidates (prefix unchanged) ------------------------------
+        stay_pb = tot + lp[:, blank][:, None]
+        stay_pnb = jnp.where(
+            lengths > 0,
+            p_nb + jnp.take_along_axis(lp, jnp.maximum(last, 0), axis=1),
+            NEG)
+
+        # --- extend candidates (append symbol c) -----------------------------
+        lp_sym = lp[:, sym_ids]                        # (B, nsym)
+        is_rep = last[:, :, None] == sym_ids[None, None, :]
+        ext_pnb = (jnp.where(is_rep, p_b[:, :, None], tot[:, :, None])
+                   + lp_sym[:, None, :])               # (B, W, nsym)
+        can_grow = lengths < L
+        ext_pnb = jnp.where(can_grow[:, :, None], ext_pnb, NEG)
+        ext_hash = prefix_hash_extend(hashes[:, :, None],
+                                      sym_ids[None, None, :])
+
+        ext_prefix = jnp.broadcast_to(prefixes[:, :, None, :],
+                                      (B, W, nsym, L))
+        widx = jnp.minimum(lengths, L - 1)
+        ext_prefix = ext_prefix.at[
+            jnp.arange(B)[:, None, None],
+            jnp.arange(W)[None, :, None],
+            jnp.arange(nsym)[None, None, :],
+            widx[:, :, None]].set(
+            jnp.broadcast_to(sym_ids[None, None, :], (B, W, nsym)))
+        ext_len = jnp.minimum(lengths + 1, L)
+
+        # --- assemble candidates: stays first, then extends ------------------
+        cand_prefix = jnp.concatenate(
+            [prefixes, ext_prefix.reshape(B, W * nsym, L)], axis=1)
+        cand_len = jnp.concatenate(
+            [lengths, jnp.repeat(ext_len, nsym, axis=1)], axis=1)
+        cand_hash = jnp.concatenate(
+            [hashes, ext_hash.reshape(B, W * nsym)], axis=1)
+        cand_pb = jnp.concatenate(
+            [stay_pb, jnp.full((B, W * nsym), NEG)], axis=1)
+        cand_pnb = jnp.concatenate(
+            [stay_pnb, ext_pnb.reshape(B, W * nsym)], axis=1)
+
+        # --- fused hash merge + top-W ----------------------------------------
+        idx, mpb, mpnb = merge_topk(cand_hash, cand_pb, cand_pnb, W=W)
+
+        new_state = (
+            jnp.take_along_axis(cand_prefix, idx[:, :, None], axis=1),
+            jnp.take_along_axis(cand_len, idx, axis=1),
+            jnp.take_along_axis(cand_hash, idx, axis=1),
+            mpb, mpnb)
+        new_state = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(
+                active.reshape((B,) + (1,) * (n.ndim - 1)), n, o),
+            new_state, state)
+        return new_state, None
+
+    lps = jnp.swapaxes(log_probs, 0, 1)                # (T, B, A)
+    ts = jnp.arange(T)
+    (prefixes, lengths, hashes, p_b, p_nb), _ = jax.lax.scan(
+        step, (prefixes, lengths, hashes, p_b, p_nb), (lps, ts))
+
+    score = _lse2(p_b, p_nb)
+    order = jnp.argsort(-score, axis=1)
+    return (jnp.take_along_axis(prefixes, order[:, :, None], axis=1),
+            jnp.take_along_axis(lengths, order, axis=1),
+            jnp.take_along_axis(score, order, axis=1))
+
+
+def ctc_beam_search_hash(log_probs, beam_width: int = 10, blank: int = -1,
+                         max_len: int | None = None, logit_length=None,
+                         backend=None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Hash-merge beam search over a single (T, A) example.
+
+    Same contract as ``ctc_beam_search`` (the dense-merge oracle), decoded
+    on the fused ``beam_merge_topk`` registry op.
+    """
+    ll = None if logit_length is None else jnp.asarray(
+        logit_length, jnp.int32).reshape(1)
+    prefixes, lengths, scores = ctc_beam_search_hash_batch(
+        log_probs[None], beam_width=beam_width, blank=blank,
+        max_len=max_len, logit_lengths=ll, backend=backend)
+    return prefixes[0], lengths[0], scores[0]

@@ -66,6 +66,26 @@ def _pore(kmer: int) -> jnp.ndarray:
     return _PORE_CACHE[kmer]
 
 
+def _levels_and_dwell(seq, cfg: SignalConfig, k_dwell):
+    """Shared channel core: per-base pore current levels + stochastic dwell.
+
+    seq (nb,) base ids -> (levels (nb,) f32, dwell (nb,) int32).  k-mer ids
+    come from a base-4 rolling window over ``seq``; dwell is 1 +
+    clipped-Poisson(mean-1).  jit/vmap-safe (shapes fixed by ``seq``).
+    """
+    nb = seq.shape[0]
+    powers = N_BASES ** jnp.arange(cfg.kmer)
+    padded = jnp.concatenate([jnp.zeros((cfg.kmer - 1,), seq.dtype), seq])
+    windows = jnp.stack([padded[i: i + nb] for i in range(cfg.kmer)], axis=0)
+    kmer_ids = jnp.tensordot(powers, windows, axes=1)          # (nb,)
+    levels = _pore(cfg.kmer)[kmer_ids]                         # (nb,)
+
+    lam = cfg.mean_dwell - 1.0
+    dwell = 1 + jnp.clip(jax.random.poisson(k_dwell, lam, (nb,)), 0,
+                         int(4 * cfg.mean_dwell)).astype(jnp.int32)
+    return levels, dwell
+
+
 def sample_example(key, cfg: SignalConfig):
     """One training example.
 
@@ -77,18 +97,7 @@ def sample_example(key, cfg: SignalConfig):
     k_seq, k_dwell, k_noise = jax.random.split(key, 3)
     nb = cfg.chunk_bases
     seq = jax.random.randint(k_seq, (nb,), 0, N_BASES)
-
-    # k-mer ids via base-4 rolling window
-    powers = N_BASES ** jnp.arange(cfg.kmer)
-    padded = jnp.concatenate([jnp.zeros((cfg.kmer - 1,), seq.dtype), seq])
-    windows = jnp.stack([padded[i: i + nb] for i in range(cfg.kmer)], axis=0)
-    kmer_ids = jnp.tensordot(powers, windows, axes=1)          # (nb,)
-    levels = _pore(cfg.kmer)[kmer_ids]                         # (nb,)
-
-    # stochastic dwell: 1 + Poisson(mean-1), clipped
-    lam = cfg.mean_dwell - 1.0
-    dwell = 1 + jnp.clip(jax.random.poisson(k_dwell, lam, (nb,)), 0,
-                         int(4 * cfg.mean_dwell)).astype(jnp.int32)
+    levels, dwell = _levels_and_dwell(seq, cfg, k_dwell)
     ends = jnp.cumsum(dwell)                                   # (nb,)
     # base index for each output sample
     t = jnp.arange(cfg.total_samples)
@@ -114,6 +123,27 @@ def sample_example(key, cfg: SignalConfig):
 
     return {"signal": signal[:, None], "labels": labels,
             "label_length": n_lab}
+
+
+def render_signal(seq, cfg: SignalConfig, key):
+    """Raw current trace for a GIVEN base sequence (golden-read fixtures).
+
+    Same channel physics as ``sample_example`` — k-mer pore levels,
+    stochastic dwell, additive noise, standardization — but driven by a
+    caller-supplied sequence over its full (variable) length, so tests can
+    round-trip genome -> signal -> basecall against known truth.  Host-side
+    data prep: shapes depend on the drawn dwells, so this is not jittable.
+
+    Returns (signal (sum(dwell),) float32, dwell (len(seq),) int32).
+    """
+    seq = jnp.asarray(seq, jnp.int32)
+    k_dwell, k_noise = jax.random.split(key)
+    levels, dwell = _levels_and_dwell(seq, cfg, k_dwell)
+    raw = jnp.repeat(levels, dwell)
+    raw = raw + cfg.noise_std * jax.random.normal(
+        k_noise, raw.shape, jnp.float32)
+    signal = (raw - raw.mean()) / (raw.std() + 1e-6)
+    return signal, dwell
 
 
 def sample_batch(key, batch: int, cfg: SignalConfig):

@@ -26,6 +26,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu  # noqa: F401
 
 from repro.kernels._compat import CompilerParams
+from repro.kernels.ctc_merge.ref import MASK  # oracle fill, bitwise-shared
 
 NEG = -1.0e9
 
@@ -60,3 +61,81 @@ def ctc_merge_pallas(eq: jnp.ndarray, scores: jnp.ndarray,
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(eq, scores)
+
+
+# ---------------------------------------------------------------------------
+# fused hash-merge + top-k (the whole per-frame beam update in one kernel)
+# ---------------------------------------------------------------------------
+
+def _merge_topk_kernel(keys_ref, pb_ref, pnb_ref, idx_ref, opb_ref, opnb_ref):
+    """One batch row: merge duplicate candidates by key, rank by merged
+    score, emit the full descending order.
+
+    Everything is dense (C x C) vector work — equality plane, two masked
+    logsumexp reductions, a comparison-count ranking, and a one-hot
+    selection — the digital rendition of Helix's crossbar merge, with the
+    top-k sort ALSO expressed as crossbar-shaped ops so a frame's whole
+    beam update is one kernel launch:
+
+      rank[i] = #{j : score[j] > score[i] or (score[j]==score[i] and j<i)}
+
+    is a permutation of 0..C-1 (ties are broken by index, matching
+    ``lax.top_k``), so emitting ``out[rank[i]] = i`` is a masked
+    column-reduction instead of a sort network.
+    """
+    keys_row = keys_ref[...]                       # (1, C) int32
+    pb_row = pb_ref[...]                           # (1, C) f32
+    pnb_row = pnb_ref[...]
+    C = keys_row.shape[1]
+
+    keys_col = jnp.reshape(keys_row, (C, 1))
+    eq = keys_col == keys_row                      # (C, C): [i, j]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+
+    # canonical = first occurrence of each key
+    dup_earlier = jnp.sum((eq & (jj < ii)).astype(jnp.int32), axis=1,
+                          keepdims=True)           # (C, 1)
+    canon = dup_earlier == 0
+
+    def masked_lse(vals_row):
+        masked = jnp.where(eq, vals_row, MASK)     # (C, C)
+        m = jnp.max(masked, axis=1, keepdims=True)
+        return m + jnp.log(jnp.sum(jnp.exp(masked - m), axis=1,
+                                   keepdims=True))  # (C, 1)
+
+    # duplicate (non-canonical) lanes are stripped of their pooled mass,
+    # matching the dense oracle — only the first occurrence carries it
+    mpb = jnp.where(canon, masked_lse(pb_row), NEG)
+    mpnb = jnp.where(canon, masked_lse(pnb_row), NEG)
+    score_col = jnp.where(canon, jnp.logaddexp(mpb, mpnb), NEG)  # (C, 1)
+    score_row = jnp.reshape(score_col, (1, C))
+
+    beats = (score_row > score_col) | ((score_row == score_col) & (jj < ii))
+    rank_col = jnp.sum(beats.astype(jnp.int32), axis=1, keepdims=True)
+
+    # out[0, r] = sum_i [rank[i] == r] * val[i]   (rank is a permutation)
+    sel = rank_col == jj                           # (C, C): [i, r]
+    idx_ref[...] = jnp.sum(jnp.where(sel, ii, 0), axis=0, keepdims=True)
+    opb_ref[...] = jnp.sum(jnp.where(sel, mpb, 0.0), axis=0, keepdims=True)
+    opnb_ref[...] = jnp.sum(jnp.where(sel, mpnb, 0.0), axis=0, keepdims=True)
+
+
+def beam_merge_topk_pallas(keys: jnp.ndarray, pb: jnp.ndarray,
+                           pnb: jnp.ndarray, *, interpret: bool = False):
+    """keys (B, C) int32, pb/pnb (B, C) f32, C a lane multiple ->
+    (idx (B, C) int32, pb (B, C) f32, pnb (B, C) f32) in rank order."""
+    B, C = keys.shape
+    assert C % 128 == 0, "pad C to the lane tile before calling"
+    spec = pl.BlockSpec((1, C), lambda b: (b, 0))
+    return pl.pallas_call(
+        _merge_topk_kernel,
+        grid=(B,),
+        in_specs=[spec, spec, spec],
+        out_specs=(spec, spec, spec),
+        out_shape=(jax.ShapeDtypeStruct((B, C), jnp.int32),
+                   jax.ShapeDtypeStruct((B, C), jnp.float32),
+                   jax.ShapeDtypeStruct((B, C), jnp.float32)),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(keys, pb, pnb)

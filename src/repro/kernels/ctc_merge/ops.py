@@ -1,4 +1,15 @@
-"""CTC beam-merge public wrapper — dispatch via ``repro.kernels.registry``."""
+"""CTC beam-merge public wrappers — dispatch via ``repro.kernels.registry``.
+
+Two ops live here:
+
+  masked_logsumexp  — the dense-equality merge (the PR-1 kernel; now the
+                      oracle path's accelerated tail)
+  beam_merge_topk   — the fused hash-merge + top-W selection that the
+                      vectorized hash beam decoder (``core.ctc``) runs
+                      every frame: candidate identity is an int32 rolling
+                      prefix hash, so duplicate detection is single-word
+                      compares instead of length-L prefix compares
+"""
 from __future__ import annotations
 
 import functools
@@ -7,8 +18,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import registry
-from repro.kernels.ctc_merge.kernel import ctc_merge_pallas
-from repro.kernels.ctc_merge.ref import ctc_merge_ref
+from repro.kernels.ctc_merge.kernel import (beam_merge_topk_pallas,
+                                            ctc_merge_pallas)
+from repro.kernels.ctc_merge.ref import (MASK, beam_merge_topk_ref,
+                                         ctc_merge_ref)
 
 NEG = -1.0e9
 
@@ -56,4 +69,75 @@ def masked_logsumexp(eq: jnp.ndarray, scores: jnp.ndarray, *, bi: int = 128,
                      backend=registry.resolve_backend(backend))
 
 
-__all__ = ["masked_logsumexp", "ctc_merge_ref"]
+# ---------------------------------------------------------------------------
+# fused hash-merge + top-k
+# ---------------------------------------------------------------------------
+
+def _topk_impl_pallas(keys, pb, pnb, *, W: int, interpret: bool = False):
+    """Pad C to the lane tile with inert rank-last lanes, run the fused
+    kernel, trim back to (B, W).
+
+    Padding invariants (see tests): pad lanes get UNIQUE keys (so each is
+    canonical — a shared sentinel would create non-canonical pad lanes at
+    NEG, which could outrank deeply-dead real candidates) and MASK-level
+    scores, so every real lane strictly outranks every pad lane and the
+    first C output ranks are bitwise what the oracle computes unpadded.
+    """
+    B, C = keys.shape
+    keys = jax.lax.bitcast_convert_type(keys.astype(jnp.uint32), jnp.int32) \
+        if keys.dtype == jnp.uint32 else keys.astype(jnp.int32)
+    Cp = -(-max(C, W) // 128) * 128
+    if Cp != C:
+        lane = jnp.arange(Cp, dtype=jnp.int32)
+        keys = jnp.concatenate(
+            [keys, jnp.broadcast_to(lane[C:], (B, Cp - C))], axis=1)
+        fill = jnp.full((B, Cp - C), MASK, jnp.float32)
+        pb = jnp.concatenate([pb.astype(jnp.float32), fill], axis=1)
+        pnb = jnp.concatenate([pnb.astype(jnp.float32), fill], axis=1)
+    idx, opb, opnb = beam_merge_topk_pallas(
+        keys, pb.astype(jnp.float32), pnb.astype(jnp.float32),
+        interpret=interpret)
+    idx, opb, opnb = idx[:, :W], opb[:, :W], opnb[:, :W]
+    if W > C:   # ranks >= C are padding by construction
+        is_pad = jnp.arange(W) >= C
+        idx = jnp.where(is_pad[None], C - 1, idx)
+        opb = jnp.where(is_pad[None], NEG, opb)
+        opnb = jnp.where(is_pad[None], NEG, opnb)
+    return jnp.clip(idx, 0, C - 1), opb, opnb
+
+
+def _topk_impl_ref(keys, pb, pnb, *, W: int, **_tiles):
+    if keys.dtype == jnp.uint32:
+        keys = jax.lax.bitcast_convert_type(keys, jnp.int32)
+    return beam_merge_topk_ref(keys.astype(jnp.int32),
+                               pb.astype(jnp.float32),
+                               pnb.astype(jnp.float32), W=W)
+
+
+registry.register_op("beam_merge_topk", ref=_topk_impl_ref,
+                     pallas=_topk_impl_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("W", "backend"))
+def _topk_dispatch(keys, pb, pnb, *, W, backend):
+    return registry.get_op("beam_merge_topk", backend)(keys, pb, pnb, W=W)
+
+
+def beam_merge_topk(keys: jnp.ndarray, pb: jnp.ndarray, pnb: jnp.ndarray,
+                    W: int, *, interpret: bool | None = None,
+                    backend: str | None = None):
+    """Merge duplicate beam candidates by integer key and keep the top W.
+
+    (B, C) keys/pb/pnb -> (idx (B, W) int32, pb (B, W), pnb (B, W)):
+    per-key pooled log-masses on the first (canonical) occurrence, ranked
+    by total score descending with ties broken by lower index.  W > C pads
+    with (C-1, NEG, NEG) lanes.  Backend resolves before the jit boundary
+    (see quant_matmul.ops)."""
+    if interpret is not None:
+        backend = "interpret" if interpret else "pallas"
+    return _topk_dispatch(keys, pb, pnb, W=W,
+                          backend=registry.resolve_backend(backend))
+
+
+__all__ = ["masked_logsumexp", "ctc_merge_ref", "beam_merge_topk",
+           "beam_merge_topk_ref"]

@@ -1,7 +1,12 @@
-"""Pure-jnp oracle for the CTC beam-merge kernel."""
+"""Pure-jnp oracles for the CTC beam-merge kernels."""
+import jax
 import jax.numpy as jnp
 
 NEG = -1.0e9
+# internal mask fill for the fused merge: low enough that exp(MASK - m)
+# underflows to exactly 0.0 for every reachable row max m, so masked-out
+# (and tile-padding) lanes contribute nothing — bitwise — to the reduction
+MASK = -2.0e9
 
 
 def ctc_merge_ref(eq: jnp.ndarray, scores: jnp.ndarray) -> jnp.ndarray:
@@ -10,3 +15,56 @@ def ctc_merge_ref(eq: jnp.ndarray, scores: jnp.ndarray) -> jnp.ndarray:
     m = jnp.max(masked, axis=-1, keepdims=True)
     return (m + jnp.log(jnp.sum(jnp.exp(masked - m), axis=-1,
                                 keepdims=True)))[..., 0]
+
+
+def _masked_lse_rows(eq: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """(B, C, C) bool x (B, C) -> (B, C); same max-subtract formula (and
+    the same MASK fill) as the Pallas kernel body so interpret/ref agree
+    bitwise."""
+    masked = jnp.where(eq, vals[:, None, :], MASK)
+    m = jnp.max(masked, axis=-1)
+    return m + jnp.log(jnp.sum(jnp.exp(masked - m[..., None]), axis=-1))
+
+
+def beam_merge_topk_ref(keys: jnp.ndarray, pb: jnp.ndarray, pnb: jnp.ndarray,
+                        *, W: int):
+    """Fused hash-merge + top-W over beam-search candidates.
+
+    Candidates i and j are the same prefix iff ``keys[b, i] == keys[b, j]``
+    (keys are rolling prefix hashes — small integers instead of full
+    prefixes).  Duplicate mass is pooled by masked logsumexp onto the
+    FIRST (canonical) occurrence; non-canonical lanes score ``NEG``; the
+    top-W lanes by merged total score win (ties broken by lower index,
+    matching ``lax.top_k``).
+
+    Args:
+      keys: (B, C) int32 candidate identity hashes.
+      pb/pnb: (B, C) f32 blank / non-blank log-mass per candidate.
+      W: beams to keep.  When W > C the tail is padded with
+         (idx=C-1, pb=pnb=NEG) lanes.
+
+    Returns (idx (B, W) int32, pb (B, W) f32, pnb (B, W) f32): the indices
+    of the winning candidates and their merged log-masses.
+    """
+    B, C = keys.shape
+    eq = keys[:, :, None] == keys[:, None, :]               # (B, C, C)
+    ar = jnp.arange(C)
+    canon = ~jnp.any(eq & (ar[None, :] < ar[:, None])[None], axis=2)
+    # pooled mass lands on the canonical lane ONLY — duplicate lanes are
+    # neutralized to NEG so a duplicate that sneaks into the top-W (beam
+    # wider than the distinct-candidate count) carries no mass twice
+    mpb = jnp.where(canon, _masked_lse_rows(eq, pb), NEG)
+    mpnb = jnp.where(canon, _masked_lse_rows(eq, pnb), NEG)
+    score = jnp.where(canon, jnp.logaddexp(mpb, mpnb), NEG)
+    k = min(W, C)
+    _, idx = jax.lax.top_k(score, k)                        # (B, k)
+    out_pb = jnp.take_along_axis(mpb, idx, axis=1)
+    out_pnb = jnp.take_along_axis(mpnb, idx, axis=1)
+    if W > C:
+        pad = W - C
+        idx = jnp.concatenate(
+            [idx, jnp.full((B, pad), C - 1, idx.dtype)], axis=1)
+        fill = jnp.full((B, pad), NEG, out_pb.dtype)
+        out_pb = jnp.concatenate([out_pb, fill], axis=1)
+        out_pnb = jnp.concatenate([out_pnb, fill], axis=1)
+    return idx.astype(jnp.int32), out_pb, out_pnb

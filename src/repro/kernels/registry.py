@@ -33,6 +33,7 @@ import dataclasses
 import difflib
 import functools
 import importlib
+import os
 from typing import Callable, Dict, Optional
 
 import jax
@@ -44,6 +45,7 @@ _OP_MODULES = {
     "quant_matmul": "repro.kernels.quant_matmul.ops",
     "gru_cell": "repro.kernels.gru_cell.ops",
     "masked_logsumexp": "repro.kernels.ctc_merge.ops",
+    "beam_merge_topk": "repro.kernels.ctc_merge.ops",
     "decode_attn": "repro.kernels.decode_attn.ops",
     "mismatch_bits": "repro.kernels.vote_cmp.ops",
 }
@@ -57,7 +59,13 @@ class OpEntry:
 
 
 _REGISTRY: Dict[str, OpEntry] = {}
-_default_backend = "auto"
+
+# ``REPRO_DEFAULT_BACKEND`` seeds what "auto" means for the process (the CI
+# backend matrix sets it); ``set_default_backend`` still overrides at runtime.
+_default_backend = os.environ.get("REPRO_DEFAULT_BACKEND", "auto")
+if _default_backend not in BACKENDS:
+    raise ValueError(
+        f"REPRO_DEFAULT_BACKEND={_default_backend!r} is not one of {BACKENDS}")
 
 
 def register_op(name: str, *, ref: Callable, pallas: Callable) -> None:

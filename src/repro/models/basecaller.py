@@ -56,7 +56,16 @@ class BasecallerConfig:
 
     @property
     def output_len(self) -> int:
-        t = self.input_len
+        return self.output_frames(self.input_len)
+
+    def output_frames(self, samples):
+        """Output frames covering ``samples`` input samples (int or array).
+
+        The conv stack's "SAME" ceil-div downsampling, applied per stage —
+        this maps a window's valid-sample count to the decoder's
+        ``logit_length`` so zero-padded tails are not decoded.
+        """
+        t = samples
         for c in self.conv:
             t = -(-t // c.stride)  # ceil div ("SAME" padding)
         return t

@@ -39,6 +39,19 @@ def n_windows(n_samples: int, cfg: ChunkConfig) -> int:
     return 1 + -(-(n_samples - cfg.window) // cfg.hop)
 
 
+def window_valid_samples(n_samples: int, cfg: ChunkConfig) -> np.ndarray:
+    """(N,) true sample count per window (== window except a padded tail).
+
+    ``chunk_signal`` zero-pads the final partial window; decoding those
+    padded frames produces garbage bases, so the pipeline converts these
+    counts to per-window ``logit_lengths`` for the beam decoder.
+    """
+    N = n_windows(n_samples, cfg)
+    starts = np.arange(N, dtype=np.int64) * cfg.hop
+    return np.minimum(cfg.window, np.maximum(n_samples - starts, 0)) \
+        .astype(np.int32)
+
+
 def chunk_signal(signal: np.ndarray, cfg: ChunkConfig) -> np.ndarray:
     """(T,) or (T, C) raw read -> (n_windows, window, C) float32.
 

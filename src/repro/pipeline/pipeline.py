@@ -134,18 +134,28 @@ class BasecallPipeline:
     # -- jitted stages -----------------------------------------------------
     @functools.cached_property
     def _decode_windows(self):
-        """(params, windows (N, window, C)) -> (reads (N, L), lens (N,))."""
+        """(params, windows (N, window, C), logit_lengths (N,)) ->
+        (reads (N, L), lens (N,)).
+
+        Decode runs on the hash-merge beam decoder (``ctc_beam_search_hash
+        _batch``) whose per-frame merge/top-k dispatches through the kernel
+        registry on this pipeline's backend; ``logit_lengths`` masks the
+        zero-padded frames of tail windows out of the decode.
+        """
         mcfg, backend = self.mcfg, self.backend
         W, L = self.beam_width, self.max_read_len
 
         @jax.jit
-        def fn(params, windows):
+        def fn(params, windows, logit_lengths):
             lps = bc.apply_basecaller(params, windows, mcfg, backend=backend)
             if W > 1:
-                reads, lens, _ = ctc_lib.ctc_beam_search_batch(
-                    lps, beam_width=W, max_len=L)
+                reads, lens, _ = ctc_lib.ctc_beam_search_hash_batch(
+                    lps, beam_width=W, max_len=L,
+                    logit_lengths=logit_lengths, backend=backend)
                 return reads[:, 0], lens[:, 0]
-            reads, lens = jax.vmap(ctc_lib.ctc_greedy_decode)(lps)
+            reads, lens = jax.vmap(
+                lambda lp, ll: ctc_lib.ctc_greedy_decode(lp, logit_length=ll)
+            )(lps, logit_lengths)
             reads = reads[:, :L] if reads.shape[1] >= L else jnp.pad(
                 reads, ((0, 0), (0, L - reads.shape[1])), constant_values=-1)
             return reads, jnp.minimum(lens, L)
@@ -165,11 +175,17 @@ class BasecallPipeline:
                 bc.apply_basecaller(params, v, mcfg, backend=backend)
                 for v in views])
             C, C_len = seat_lib.consensus_reads(lps, center, scfg)
-            reads, lens, scores = ctc_lib.ctc_beam_search_batch(
-                lps[center], beam_width=W, max_len=scfg.max_read_len)
+            reads, lens, scores = ctc_lib.ctc_beam_search_hash_batch(
+                lps[center], beam_width=W, max_len=scfg.max_read_len,
+                backend=backend)
             return C, C_len, reads[:, 0], lens[:, 0], scores[:, 0]
 
         return fn
+
+    def window_logit_lengths(self, n_samples: int) -> np.ndarray:
+        """(N,) decoder ``logit_lengths`` for one read's chunked windows."""
+        valid = chunking.window_valid_samples(n_samples, self.chunk)
+        return np.asarray(self.mcfg.output_frames(valid), np.int32)
 
     # -- long-read base-calling --------------------------------------------
     def basecall_iter(self, signal, params=None
@@ -182,15 +198,19 @@ class BasecallPipeline:
         """
         params = self._params(params)
         windows = chunking.chunk_signal(signal, self.chunk)
+        frame_lens = self.window_logit_lengths(np.asarray(signal).shape[0])
         N = windows.shape[0]
         B = self.chunk.batch_windows
         for s in range(0, N, B):
             grp = windows[s: s + B]
+            fl = frame_lens[s: s + B]
             n = grp.shape[0]
             if n < B:
                 grp = np.concatenate(
                     [grp, np.zeros((B - n,) + grp.shape[1:], grp.dtype)])
-            reads, lens = self._decode_windows(params, jnp.asarray(grp))
+                fl = np.concatenate([fl, np.zeros((B - n,), fl.dtype)])
+            reads, lens = self._decode_windows(params, jnp.asarray(grp),
+                                               jnp.asarray(fl))
             yield np.asarray(reads[:n]), np.asarray(lens[:n])
 
     def basecall(self, signal, params=None,

@@ -29,6 +29,7 @@ class ReadRequest:
     rid: int
     signal: np.ndarray                   # (T,) or (T, C) raw samples
     windows: Optional[np.ndarray] = None  # (N, window, C), set at admission
+    frame_lengths: Optional[np.ndarray] = None  # (N,) decoder logit_lengths
     cursor: int = 0
     reads: List[np.ndarray] = dataclasses.field(default_factory=list)
     lengths: List[int] = dataclasses.field(default_factory=list)
@@ -59,6 +60,8 @@ class BasecallEngine:
 
     def _admit_one(self, slot: int, req: ReadRequest):
         req.windows = chunking.chunk_signal(req.signal, self.pipe.chunk)
+        req.frame_lengths = self.pipe.window_logit_lengths(
+            np.asarray(req.signal).shape[0])
         req.cursor = 0
 
     def _admit(self):
@@ -73,8 +76,12 @@ class BasecallEngine:
         batch = np.stack([
             r.windows[r.cursor] if r is not None else self._zero
             for r in self.sched.slots])
+        frames = np.asarray([
+            r.frame_lengths[r.cursor] if r is not None else 0
+            for r in self.sched.slots], np.int32)
         reads, lens = self.pipe._decode_windows(self.params,
-                                                jnp.asarray(batch))
+                                                jnp.asarray(batch),
+                                                jnp.asarray(frames))
         reads, lens = np.asarray(reads), np.asarray(lens)
         self.steps += 1
         for slot, req in enumerate(self.sched.slots):

@@ -76,3 +76,62 @@ def _install_hypothesis_fallback() -> None:
 
 if importlib.util.find_spec("hypothesis") is None:
     _install_hypothesis_fallback()
+
+
+# ---------------------------------------------------------------------------
+# golden-read fixture: deterministic genome -> signal -> basecall round-trip
+# ---------------------------------------------------------------------------
+#
+# One session-scoped trained pipeline (the quickstart recipe: demo-scale
+# Guppy, 5-bit quant, warm-up + SEAT, fixed seeds end to end) plus a known
+# genome rendered through the synthetic pore channel.  Tests pin consensus
+# read identity against thresholds comfortably below the deterministic
+# achieved values, so decoder/voting changes cannot silently degrade
+# accuracy.  Built lazily — only sessions running the golden tests pay the
+# ~30 s training cost.
+
+import pytest
+
+GOLDEN_SEED = 42
+GOLDEN_GENOME_LEN = 60
+GOLDEN_TRAIN_STEPS = 300
+
+
+@pytest.fixture(scope="session")
+def golden_pipeline():
+    """(pipe, params, data_config) trained on the fixed golden recipe."""
+    import jax
+    from repro.core.quant import QuantConfig
+    from repro.data import genome
+    from repro.pipeline import BasecallPipeline, TrainPolicy
+
+    pipe = BasecallPipeline.from_preset(
+        "guppy", scale="demo",
+        quant=QuantConfig(enabled=True, bits_w=5, bits_a=5),
+        backend="ref", beam_width=5)
+    dcfg = pipe.data_config(kmer=1, mean_dwell=6.0, max_label_len=40)
+    params = pipe.init_params(jax.random.PRNGKey(0))
+    warm = int(GOLDEN_TRAIN_STEPS * 0.73)          # quickstart's 220/80 split
+    policy = TrainPolicy(warmup_steps=warm,
+                         seat_steps=GOLDEN_TRAIN_STEPS - warm)
+    trainer = pipe.trainer(policy)
+    state = trainer.init(params)
+    for step in range(policy.total_steps):
+        batch = genome.batch_for_step(step, 8, dcfg)
+        params, state, _, _ = pipe.train_step(params, state, batch, step)
+    pipe.params = params
+    return pipe, params, dcfg
+
+
+@pytest.fixture(scope="session")
+def golden_read(golden_pipeline):
+    """(sequence (60,), signal) — a known genome through the pore model."""
+    import jax
+    import numpy as np
+    from repro.data import genome
+
+    _, _, dcfg = golden_pipeline
+    rng = np.random.default_rng(GOLDEN_SEED)
+    seq = rng.integers(0, 4, GOLDEN_GENOME_LEN).astype(np.int32)
+    sig, _ = genome.render_signal(seq, dcfg, jax.random.PRNGKey(99))
+    return seq, np.asarray(sig)

@@ -1,0 +1,63 @@
+"""Golden-read regression: deterministic genome -> signal -> basecall.
+
+The session-scoped ``golden_pipeline`` fixture (conftest.py) trains the
+quickstart recipe with fixed seeds, and ``golden_read`` renders a known
+60-base genome through the synthetic pore channel.  Every threshold here
+is pinned comfortably below the deterministically achieved value, so a
+decoder / merge-kernel / voting change that silently degrades accuracy
+trips the gate while numerics-level jitter does not.
+
+Achieved values at pin time (jax CPU, seed-fixed):
+  window read accuracy  0.543
+  consensus identity    0.467
+"""
+import numpy as np
+
+from repro.core import metrics
+
+WINDOW_ACC_FLOOR = 0.45
+CONSENSUS_IDENTITY_FLOOR = 0.35
+
+
+def _identity(read, length, truth) -> float:
+    return 1.0 - metrics.edit_distance(read[: int(length)], truth) / len(truth)
+
+
+def test_golden_window_read_accuracy(golden_pipeline):
+    """Fixed-window serving path: beam-decoded reads vs training labels."""
+    from repro.data import genome
+
+    pipe, params, dcfg = golden_pipeline
+    batch = genome.batch_for_step(9999, 8, dcfg)          # held-out step
+    _, _, top, top_len, _ = pipe.basecall_windows(batch["signal"], params)
+    acc = metrics.accuracy(np.asarray(top), np.asarray(top_len),
+                           np.asarray(batch["labels"]),
+                           np.asarray(batch["label_length"]))
+    assert acc >= WINDOW_ACC_FLOOR, f"window read accuracy {acc:.3f}"
+
+
+def test_golden_consensus_identity(golden_pipeline, golden_read):
+    """Long-read path: chunk -> hash-merge beam decode -> vote, vs truth."""
+    pipe, params, _ = golden_pipeline
+    seq, sig = golden_read
+    res = pipe.basecall(sig, params)
+    ident = _identity(res.read, res.length, seq)
+    assert ident >= CONSENSUS_IDENTITY_FLOOR, (
+        f"consensus identity {ident:.3f} (len {res.length} vs {len(seq)})")
+
+
+def test_golden_consensus_matches_engine(golden_pipeline, golden_read):
+    """The continuous-batching engine must reproduce the pipeline's golden
+    consensus exactly (same windows, same logit_lengths, same decoder)."""
+    from repro.serve.basecall_engine import BasecallEngine, ReadRequest
+
+    pipe, params, _ = golden_pipeline
+    seq, sig = golden_read
+    want = pipe.basecall(sig, params)
+    eng = BasecallEngine(pipe, params=params, batch_slots=2)
+    eng.submit(ReadRequest(rid=0, signal=sig))
+    done = eng.run()
+    got = done[0].result
+    assert got.length == want.length
+    np.testing.assert_array_equal(got.read[: got.length],
+                                  want.read[: want.length])

@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core import voting
-from repro.kernels.ctc_merge.ops import masked_logsumexp
-from repro.kernels.ctc_merge.ref import ctc_merge_ref
+from repro.kernels.ctc_merge.ops import beam_merge_topk, masked_logsumexp
+from repro.kernels.ctc_merge.ref import beam_merge_topk_ref, ctc_merge_ref
 from repro.kernels.gru_cell.ops import gru_cell
 from repro.kernels.gru_cell.ref import gru_cell_ref
 from repro.kernels.quant_matmul.ops import qmm_from_float, quant_matmul
@@ -130,6 +130,123 @@ def test_ctc_merge_identity_mask_is_noop():
     out = masked_logsumexp(eq, scores)
     np.testing.assert_allclose(np.asarray(out), np.asarray(scores),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# beam_merge_topk (fused hash-merge + top-k)
+# ---------------------------------------------------------------------------
+
+NEG = -1.0e9
+
+
+def _topk_case(rng, B, C, n_keys):
+    keys = jnp.asarray(rng.integers(0, n_keys, (B, C)) * 7919 + 13,
+                       jnp.int32)   # duplicates guaranteed when n_keys < C
+    pb = jnp.asarray(rng.standard_normal((B, C)).astype(np.float32) * 4)
+    pnb = jnp.asarray(rng.standard_normal((B, C)).astype(np.float32) * 4)
+    return keys, pb, pnb
+
+
+@pytest.mark.parametrize("B,C,W", [
+    (2, 128, 8),     # exactly one lane tile
+    (3, 20, 6),      # ragged C (padding path), duplicates
+    (1, 300, 16),    # multi-tile padded C
+    (2, 5, 5),       # W == C
+    (2, 7, 1),       # top-1
+])
+def test_beam_merge_topk_interpret_vs_ref(B, C, W):
+    rng = np.random.default_rng(B * C + W)
+    keys, pb, pnb = _topk_case(rng, B, C, max(2, C // 3))
+    ir, pr, nr = beam_merge_topk(keys, pb, pnb, W, backend="ref")
+    ii, pi, ni = beam_merge_topk(keys, pb, pnb, W, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(ir), np.asarray(ii))
+    np.testing.assert_allclose(np.asarray(pr), np.asarray(pi),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(nr), np.asarray(ni),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_beam_merge_topk_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    B, C, W = 3, 24, 7
+    keys, pb, pnb = _topk_case(rng, B, C, 8)
+    idx, opb, opnb = beam_merge_topk(keys, pb, pnb, W, backend="ref")
+    k, p, n = np.asarray(keys), np.asarray(pb, np.float64), \
+        np.asarray(pnb, np.float64)
+    for b in range(B):
+        canon = [i for i in range(C) if k[b, i] not in k[b, :i]]
+
+        def lse(v):
+            m = v.max()
+            return m + np.log(np.exp(v - m).sum())
+
+        score = {i: np.logaddexp(lse(p[b, k[b] == k[b, i]]),
+                                 lse(n[b, k[b] == k[b, i]])) for i in canon}
+        order = sorted(canon, key=lambda i: (-score[i], i))[:W]
+        np.testing.assert_array_equal(np.asarray(idx[b]), order)
+        for w, i in enumerate(order):
+            np.testing.assert_allclose(float(opb[b, w]),
+                                       lse(p[b, k[b] == k[b, i]]), rtol=1e-5)
+
+
+def test_beam_merge_topk_neg_inf_lanes():
+    """Dead (NEG) lanes must neither win nor poison the pooled masses, on
+    both backends, including when every duplicate of a key is dead."""
+    keys = jnp.asarray([[5, 5, 9, 9, 9, 3, 3, 2]], jnp.int32)
+    pb = jnp.asarray([[-1., NEG, NEG, NEG, NEG, -2., NEG, NEG]], jnp.float32)
+    pnb = jnp.asarray([[NEG, NEG, NEG, NEG, NEG, NEG, -3., NEG]], jnp.float32)
+    for backend in ("ref", "interpret"):
+        idx, opb, opnb = beam_merge_topk(keys, pb, pnb, 4, backend=backend)
+        # live keys 5 (pb=-1) and 3 (lse(-2,-3)) outrank everything dead;
+        # all dead lanes tie at NEG in f32 (log-count vanishes below the
+        # ulp at 1e9), so the remaining ranks fall to the lowest indices
+        np.testing.assert_array_equal(np.asarray(idx[0]), [0, 5, 1, 2])
+        np.testing.assert_allclose(float(opb[0, 0]), -1.0, atol=1e-6)
+        np.testing.assert_allclose(float(opnb[0, 1]), -3.0, atol=1e-6)
+
+
+def test_beam_merge_topk_w_greater_than_c():
+    rng = np.random.default_rng(9)
+    keys, pb, pnb = _topk_case(rng, 2, 6, 4)
+    ir, pr, nr = beam_merge_topk(keys, pb, pnb, 10, backend="ref")
+    ii, pi, ni = beam_merge_topk(keys, pb, pnb, 10, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(ir), np.asarray(ii))
+    np.testing.assert_allclose(np.asarray(pr), np.asarray(pi),
+                               rtol=1e-6, atol=1e-6)
+    # ranks past C are (C-1, NEG, NEG) filler
+    assert np.all(np.asarray(ir)[:, 6:] == 5)
+    assert np.all(np.asarray(pr)[:, 6:] == NEG)
+    assert np.all(np.asarray(nr)[:, 6:] == NEG)
+
+
+def test_beam_merge_topk_strips_duplicate_mass():
+    """Regression: duplicate (non-canonical) lanes selected into a wide
+    beam must carry NEG mass, not a second copy of the pooled mass —
+    otherwise the decoder double-counts probability."""
+    keys = jnp.full((1, 4), 77, jnp.int32)       # all one prefix
+    pb = jnp.asarray([[-1.0, -1.5, -2.0, -2.5]], jnp.float32)
+    pnb = jnp.full((1, 4), NEG, jnp.float32)
+    for backend in ("ref", "interpret"):
+        idx, opb, opnb = beam_merge_topk(keys, pb, pnb, 4, backend=backend)
+        assert int(idx[0, 0]) == 0
+        want = np.log(np.exp(-1.0) + np.exp(-1.5) + np.exp(-2.0)
+                      + np.exp(-2.5))
+        np.testing.assert_allclose(float(opb[0, 0]), want, rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(opb[0, 1:]),
+                                      np.full(3, NEG, np.float32))
+
+
+def test_beam_merge_topk_accepts_uint32_keys():
+    """The decoder passes rolling hashes as uint32; both backends must
+    bitcast rather than convert (values above 2^31 stay distinct)."""
+    keys = jnp.asarray([[0xFFFFFFFF, 0x80000000, 1, 0xFFFFFFFF]], jnp.uint32)
+    pb = jnp.asarray([[-1., -2., -3., -4.]], jnp.float32)
+    pnb = jnp.full((1, 4), NEG, jnp.float32)
+    for backend in ("ref", "interpret"):
+        idx, opb, _ = beam_merge_topk(keys, pb, pnb, 3, backend=backend)
+        np.testing.assert_array_equal(np.asarray(idx[0]), [0, 1, 2])
+        np.testing.assert_allclose(
+            float(opb[0, 0]), np.logaddexp(-1.0, -4.0), rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------

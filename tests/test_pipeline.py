@@ -47,8 +47,10 @@ def test_basecall_matches_windowed_reference():
     windows = chunk_signal(sig, pipe.chunk)
     lps = bc.apply_basecaller(pipe.params, jnp.asarray(windows), pipe.mcfg,
                               backend=Backend("ref"))
-    reads, lens, _ = ctc_lib.ctc_beam_search_batch(
-        lps, beam_width=pipe.beam_width, max_len=pipe.max_read_len)
+    frames = pipe.window_logit_lengths(sig.shape[0])
+    reads, lens, _ = ctc_lib.ctc_beam_search_hash_batch(
+        lps, beam_width=pipe.beam_width, max_len=pipe.max_read_len,
+        logit_lengths=jnp.asarray(frames), backend="ref")
     reads, lens = reads[:, 0], lens[:, 0]
     span = pipe.max_read_len * windows.shape[0]
     cons, clen = voting_lib.vote(reads, lens, span=span)
@@ -58,6 +60,40 @@ def test_basecall_matches_windowed_reference():
     assert got.length == int(clen)
     np.testing.assert_array_equal(got.read[: got.length],
                                   np.asarray(cons[: clen]))
+
+
+def test_tail_window_padding_not_decoded():
+    """Regression (PR 2 bugfix): a zero-padded tail window must decode the
+    same read as the unpadded signal slice — padded frames previously
+    entered the beam search and emitted garbage bases."""
+    pipe = _pipe()
+    win = pipe.mcfg.input_len
+    sig = _long_signal(win + 17, seed=8)          # final window mostly padding
+    got = pipe.basecall(sig)
+    frames = pipe.window_logit_lengths(sig.shape[0])
+    n_frames = int(frames[-1])
+    assert n_frames < pipe.mcfg.output_len        # tail really is partial
+
+    # decode the tail window's valid prefix only, no padding involved
+    windows = chunk_signal(sig, pipe.chunk)
+    lps = bc.apply_basecaller(pipe.params, jnp.asarray(windows), pipe.mcfg,
+                              backend=Backend("ref"))
+    reads, lens, _ = ctc_lib.ctc_beam_search_hash_batch(
+        lps[-1:, :n_frames], beam_width=pipe.beam_width,
+        max_len=pipe.max_read_len, backend="ref")
+    want = np.asarray(reads[0, 0])
+    want_len = int(lens[0, 0])
+
+    assert int(got.window_lengths[-1]) == want_len
+    np.testing.assert_array_equal(got.window_reads[-1][:want_len],
+                                  want[:want_len])
+    # and the garbage regime is real: decoding WITH the padded frames
+    # must not be what the pipeline reports (the window is mostly padding)
+    full, flens, _ = ctc_lib.ctc_beam_search_hash_batch(
+        lps[-1:], beam_width=pipe.beam_width, max_len=pipe.max_read_len,
+        backend="ref")
+    assert int(flens[0, 0]) != want_len or not np.array_equal(
+        np.asarray(full[0, 0])[:want_len], want[:want_len])
 
 
 def test_basecall_single_window_read():

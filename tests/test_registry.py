@@ -52,16 +52,25 @@ def _mismatch_bits_args(rng):
     return (r1, r2), {"K": 5}
 
 
+def _beam_merge_topk_args(rng):
+    B, C = 2, 45                                 # ragged vs the 128 lane tile
+    keys = jnp.asarray(rng.integers(0, 12, (B, C)), jnp.int32)  # duplicates
+    pb = jnp.asarray(rng.standard_normal((B, C)).astype(np.float32) * 4)
+    pnb = jnp.asarray(rng.standard_normal((B, C)).astype(np.float32) * 4)
+    return (keys, pb, pnb), {"W": 7}
+
+
 _CASES = {
     "quant_matmul": _quant_matmul_args,
     "gru_cell": _gru_cell_args,
     "masked_logsumexp": _masked_logsumexp_args,
+    "beam_merge_topk": _beam_merge_topk_args,
     "decode_attn": _decode_attn_args,
     "mismatch_bits": _mismatch_bits_args,
 }
 
 
-def test_registry_knows_all_five_ops():
+def test_registry_knows_all_registered_ops():
     assert set(registry.list_ops()) == set(_CASES)
 
 
@@ -73,9 +82,13 @@ def test_ref_matches_interpret_on_ragged_shapes(name):
     args, kw = _CASES[name](rng)
     ref = registry.get_op(name, "ref")(*args, **kw)
     interp = registry.get_op(name, "interpret")(*args, **kw)
-    assert ref.shape == interp.shape, name
-    np.testing.assert_allclose(np.asarray(ref), np.asarray(interp),
-                               rtol=1e-5, atol=1e-5)
+    ref_leaves = jax.tree_util.tree_leaves(ref)
+    interp_leaves = jax.tree_util.tree_leaves(interp)
+    assert len(ref_leaves) == len(interp_leaves), name
+    for r, i in zip(ref_leaves, interp_leaves):
+        assert r.shape == i.shape, name
+        np.testing.assert_allclose(np.asarray(r), np.asarray(i),
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_unknown_op_suggests_nearest():
