@@ -1,6 +1,11 @@
 """Fig 9: execution-time breakdown of the quantized base-calling pipeline
 (DNN vs CTC decode vs read vote), measured on our CPU implementation.
 Paper (GPU, 16-bit Guppy): DNN 46.3 %, CTC 16.7 %, vote 37 %.
+
+Also times the serving DNN both ways — repack-per-call (weights
+re-quantized inside every jitted forward) vs the quantize-once
+``PackedParams`` artifact — so the pack-once win is measured, not
+asserted (``run.py --packed/--no-packed``).
 """
 import functools
 
@@ -11,13 +16,14 @@ from repro.core import ctc as ctc_lib
 from repro.core import voting
 from repro.core.quant import QuantConfig
 from repro.data import genome
+from repro.kernels.registry import Backend
 from repro.models import basecaller as bc
 from ._util import time_call
 
 B = 8
 
 
-def run():
+def run(packed: bool = True):
     cfg = bc.tiny_preset("guppy").with_quant(
         QuantConfig(enabled=True, bits_w=5, bits_a=5))
     params = bc.init_basecaller(jax.random.PRNGKey(0), cfg)
@@ -44,10 +50,26 @@ def run():
     t_vote = time_call(vote, grp, grplen)
 
     total = t_dnn + t_ctc + t_vote
-    return [
+    rows = [
         ("fig9/dnn", t_dnn, f"{100*t_dnn/total:.1f}% (paper GPU 46.3%)"),
         ("fig9/ctc_decode", t_ctc, f"{100*t_ctc/total:.1f}% (paper 16.7%)"),
         ("fig9/read_vote", t_vote, f"{100*t_vote/total:.1f}% (paper 37%)"),
         ("fig9/ctc_plus_vote", t_ctc + t_vote,
          f"{100*(t_ctc+t_vote)/total:.1f}% (paper 53.7%)"),
     ]
+
+    # serving DNN: repack-per-call vs the quantize-once artifact (PR 3)
+    be = Backend("auto")
+    serve = jax.jit(lambda p, s: bc.apply_basecaller(p, s, cfg, backend=be))
+    serve(params, batch["signal"])
+    t_repack = time_call(serve, params, batch["signal"], iters=15)
+    rows.append(("fig9/dnn_serve_repack", t_repack,
+                 "weights re-quantized inside every forward"))
+    if packed:
+        artifact = jax.block_until_ready(bc.pack_basecaller(params, cfg))
+        serve(artifact, batch["signal"])
+        t_packed = time_call(serve, artifact, batch["signal"], iters=15)
+        rows.append(("fig9/dnn_serve_packed", t_packed,
+                     f"{t_repack / t_packed:.2f}x vs repack "
+                     "(PackedParams, quantize-once)"))
+    return rows

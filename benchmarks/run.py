@@ -25,6 +25,13 @@ def main() -> None:
     ap.add_argument("--backend", default="auto",
                     choices=list(registry.BACKENDS),
                     help="kernel backend for every suite (registry-wide)")
+    ap.add_argument("--packed", dest="packed", action="store_true",
+                    default=True,
+                    help="measure the quantize-once PackedParams serving "
+                         "path next to repack-per-call (default)")
+    ap.add_argument("--no-packed", dest="packed", action="store_false",
+                    help="skip the packed-artifact rows (repack-per-call "
+                         "baseline only)")
     args = ap.parse_args()
     registry.set_default_backend(args.backend)
 
@@ -34,7 +41,7 @@ def main() -> None:
     suites = [
         ("table3", table3_models.run),
         ("fig7", fig7_quant_throughput.run),
-        ("fig9", fig9_breakdown.run),
+        ("fig9", lambda: fig9_breakdown.run(packed=args.packed)),
         ("fig21", (lambda: fig21_seat.run(steps=40)) if args.quick
          else fig21_seat.run),
         ("fig24", fig24_pim.run),

@@ -16,6 +16,7 @@ from repro.core.voting import (
 )
 from repro.core.quant import (
     QuantConfig, fake_quant, fq_weight, fq_act, qdense,
-    pack_weight, pack_act, dequant_matmul_reference, tree_fake_quant,
+    pack_weight, pack_act, pack_act_rows, dequant_matmul_reference,
+    packed_dense_reference, tree_fake_quant,
 )
 from repro.core.seat import SEATConfig, seat_loss, consensus_reads, make_views

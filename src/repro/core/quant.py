@@ -29,9 +29,18 @@ class QuantConfig:
     per_channel: bool = True  # per-output-channel weight scales
     # STE clipping range follows the observed absmax (no learned step size —
     # matches FQN [18] as used by the paper)
+    weights_prequantized: bool = False
+    # serving-artifact mode: every weight the model consumes is ALREADY on
+    # the b-bit grid (snapped once at pack time), so ``fq_weight`` is the
+    # identity and the jitted serving trace carries zero weight-quantization
+    # ops.  Activation quantization is unaffected.
 
     def with_bits(self, bits: int) -> "QuantConfig":
         return dataclasses.replace(self, bits_w=bits, bits_a=bits, enabled=True)
+
+    def as_prequantized(self) -> "QuantConfig":
+        """The serving view of this policy (weights pre-snapped at pack time)."""
+        return dataclasses.replace(self, weights_prequantized=True)
 
 
 def qmax(bits: int) -> int:
@@ -63,8 +72,13 @@ def fake_quant(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
 
 
 def fq_weight(w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
-    """Fake-quant a weight; per-output-channel scales on the LAST axis."""
-    if not cfg.enabled:
+    """Fake-quant a weight; per-output-channel scales on the LAST axis.
+
+    Identity when ``cfg.weights_prequantized`` — the packed serving
+    artifact already snapped every weight to the grid, and re-quantizing
+    in-trace is exactly the per-call cost the artifact exists to remove.
+    """
+    if not cfg.enabled or cfg.weights_prequantized:
         return w
     axis = tuple(range(w.ndim - 1)) if (cfg.per_channel and w.ndim > 1) else None
     return fake_quant(w, cfg.bits_w, axis=axis)
@@ -117,6 +131,22 @@ def dequant_matmul_reference(xq, x_scale, wq, w_scale):
     """Oracle for the quantized matmul: int32 accumulate, fp dequant."""
     acc = xq.astype(jnp.int32) @ wq.astype(jnp.int32)
     return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def packed_dense_reference(x: jnp.ndarray, wq: jnp.ndarray, sw: jnp.ndarray,
+                           bits_a: int) -> jnp.ndarray:
+    """Oracle for the packed serving projection.
+
+    Consumes a pre-packed ``(wq int8, sw fp32)`` weight — the serving
+    artifact built once by ``pack_weight`` — and quantizes ONLY the
+    activation (per-row scales, batch-composition invariant).  This is the
+    numerics contract ``kernels.quant_matmul.qmm_packed`` and the packed
+    base-caller apply path must match bit for bit.
+    """
+    lead, F = x.shape[:-1], x.shape[-1]
+    xq, sx = pack_act_rows(x.reshape(-1, F), bits_a)
+    y = dequant_matmul_reference(xq, sx, wq, sw.reshape(1, -1))
+    return y.reshape(lead + (wq.shape[-1],))
 
 
 def tree_fake_quant(params, cfg: QuantConfig, predicate=None):

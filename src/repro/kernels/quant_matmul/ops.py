@@ -81,4 +81,23 @@ def qmm_from_float(x: jnp.ndarray, w: jnp.ndarray, bits: int = 5,
                         interpret=interpret, backend=backend)
 
 
-__all__ = ["quant_matmul", "qmm_from_float", "quant_matmul_ref"]
+def qmm_packed(x: jnp.ndarray, wq: jnp.ndarray, sw: jnp.ndarray,
+               *, bits_a: int = 5,
+               backend: str | None = None) -> jnp.ndarray:
+    """Integer matmul against a PRE-PACKED weight — no float detour.
+
+    ``(wq int8, sw fp32)`` is the quantize-once serving artifact
+    (``core.quant.pack_weight`` at pack time); only the activation is
+    quantized here, with per-row scales so the result is batch-composition
+    invariant (see ``core.quant.pack_act_rows``).  The trace therefore
+    contains zero weight-quantization ops.
+    """
+    lead, F = x.shape[:-1], x.shape[-1]
+    xq, sx = quant_lib.pack_act_rows(x.reshape(-1, F), bits_a)
+    one = jnp.ones((1, 1), jnp.float32)
+    y = quant_matmul(xq, wq, one, sw.reshape(1, -1), backend=backend) * sx
+    return y.reshape(lead + (wq.shape[-1],))
+
+
+__all__ = ["quant_matmul", "qmm_from_float", "qmm_packed",
+           "quant_matmul_ref"]

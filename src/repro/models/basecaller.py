@@ -9,7 +9,10 @@ All projections route through ``core.quant.qdense`` so a single
 ``QuantConfig`` turns the whole model into its FQN-style fake-quantized twin
 (the serving engine swaps these matmuls for the ``quant_matmul`` Pallas
 kernel).  Parameters are plain pytrees; ``init_basecaller``/
-``apply_basecaller`` are the public API.
+``apply_basecaller`` are the public API, plus the train-vs-serve split:
+``pack_basecaller`` builds the quantize-once ``PackedParams`` serving
+artifact (weights pre-quantized, zero weight-quant ops in the serving
+trace) that ``apply_basecaller`` accepts polymorphically.
 
 Note on Table 3: the paper's MAC/param numbers are internally inconsistent
 (see DESIGN.md §8); presets reproduce the stated *structures* and
@@ -19,6 +22,7 @@ paper's.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -147,33 +151,114 @@ def init_basecaller(key, cfg: BasecallerConfig):
 
 
 # ---------------------------------------------------------------------------
+# packed serving artifact
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedParams:
+    """The quantize-once serving artifact for one base-caller.
+
+    Built ONCE by ``pack_basecaller`` from a float training checkpoint;
+    every weight arrives at the jitted serving trace already on the b-bit
+    grid, so the trace contains zero weight-quantization ops (only
+    activation packing + the registry's integer kernels):
+
+      conv : [{"w"  (K, Cin, Cout) pre-fake-quantized fp32, "b"}]
+      rnn  : [{"wq" (F, gates*H) int8, "sw" (1, gates*H) fp32,
+               "u"  (H, gates*H) pre-snapped fp32 (fused-kernel / recurrent
+               fake-quant path consumes it as-is), "b"}]
+      fc   : {"wq" int8, "sw" fp32, "b"}
+
+    With quantization disabled the matrices stay plain fp32 under "w".
+    A registered pytree, so it rides through ``jax.jit`` like any params
+    tree — its distinct treedef keeps packed and float traces separate.
+    """
+    conv: list
+    rnn: list
+    fc: dict
+
+    def tree_flatten(self):
+        return ((self.conv, self.rnn, self.fc), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    def as_tree(self) -> dict:
+        return {"conv": self.conv, "rnn": self.rnn, "fc": self.fc}
+
+
+def _pack_matrix(w, q: QuantConfig) -> dict:
+    if not q.enabled:
+        return {"w": w}
+    wq, sw = quant_lib.pack_weight(w, q.bits_w)
+    return {"wq": wq, "sw": sw}
+
+
+@functools.partial(jax.jit, static_argnames="cfg")
+def pack_basecaller(params, cfg: BasecallerConfig) -> PackedParams:
+    """Float checkpoint -> packed serving artifact (quantize ONCE).
+
+    Uses the exact quantizers the per-call serving path used in-trace
+    (``pack_weight`` for integer projections, ``fq_weight`` for conv and
+    recurrent matrices), so ``apply_basecaller(packed, ...)`` is bitwise
+    identical to the old repack-per-call path on every backend.
+
+    Jitted on purpose — not for speed, for BITS: inside jit the b-bit grid
+    divisor is a trace constant and XLA folds it exactly as it did inside
+    the per-call serving trace; op-by-op eager execution constant-folds
+    differently and drifts the low bit of the scales.
+    """
+    q = cfg.quant
+    conv = [{"w": fq_weight(p["w"], q), "b": p["b"]} for p in params["conv"]]
+    rnn = [dict(_pack_matrix(p["w"], q), u=fq_weight(p["u"], q), b=p["b"])
+           for p in params["rnn"]]
+    fc = dict(_pack_matrix(params["fc"]["w"], q), b=params["fc"]["b"])
+    return PackedParams(conv=conv, rnn=rnn, fc=fc)
+
+
+def is_packed(params) -> bool:
+    return isinstance(params, PackedParams)
+
+
+# ---------------------------------------------------------------------------
 # apply
 # ---------------------------------------------------------------------------
 
-def _qdense_backend(x, w, q: QuantConfig, backend: Backend,
+def _qdense_backend(x, layer, q: QuantConfig, backend: Backend,
                     b: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Dense projection on the integer serving path.
 
-    With quantization enabled the matmul runs as int8-container codes on
-    the registry's ``quant_matmul`` op (the paper's NVM dot-product engine
-    on the MXU); otherwise it is a plain fp matmul.  Inference-only: the
-    packed-integer path has no STE gradients.
+    ``layer`` is one projection's weights: ``{"wq", "sw"}`` pre-packed
+    codes from the serving artifact, or ``{"w"}`` float (packed on the fly
+    — the legacy repack-per-call path).  With quantization enabled the
+    matmul runs as int8-container codes on the registry's ``quant_matmul``
+    op (the paper's NVM dot-product engine on the MXU); otherwise it is a
+    plain fp matmul.  Inference-only: the packed-integer path has no STE
+    gradients.
 
     Activations carry PER-ROW scales (folded into the epilogue outside the
     kernel, whose dequant wants a scalar) so each example's numerics are
     independent of who else shares the batch — the continuous-batching
     engine and the fixed-batch pipeline then agree bit for bit.
     """
-    lead, F = x.shape[:-1], x.shape[-1]
-    x2 = x.reshape(-1, F)
     if q.enabled:
-        xq, sx = quant_lib.pack_act_rows(x2, q.bits_a)       # (M,1) scales
-        wq, sw = quant_lib.pack_weight(w, q.bits_w)
-        one = jnp.ones((1, 1), jnp.float32)
-        y = backend.op("quant_matmul")(xq, wq, one, sw) * sx
+        if "wq" in layer:                    # quantize-once artifact
+            from repro.kernels.quant_matmul import ops as qmm_ops
+            y = qmm_ops.qmm_packed(x, layer["wq"], layer["sw"],
+                                   bits_a=q.bits_a, backend=backend.mode)
+        else:                                # legacy repack-per-call
+            lead, F = x.shape[:-1], x.shape[-1]
+            x2 = x.reshape(-1, F)
+            xq, sx = quant_lib.pack_act_rows(x2, q.bits_a)   # (M,1) scales
+            wq, sw = quant_lib.pack_weight(layer["w"], q.bits_w)
+            one = jnp.ones((1, 1), jnp.float32)
+            y = (backend.op("quant_matmul")(xq, wq, one, sw) * sx) \
+                .reshape(lead + (wq.shape[-1],))
     else:
-        y = x2 @ w
-    y = y.reshape(lead + (w.shape[-1],))
+        y = x @ layer["w"]
     return y if b is None else y + b
 
 
@@ -234,7 +319,7 @@ def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool,
     if backend is None:
         x_proj = qdense(x, layer["w"], q)    # (B, T, gates*h)
     else:
-        x_proj = _qdense_backend(x, layer["w"], q, backend)
+        x_proj = _qdense_backend(x, layer, q, backend)
     x_proj = jnp.swapaxes(x_proj, 0, 1)      # (T, B, gates*h)
 
     if cfg.rnn_type == "gru":
@@ -271,7 +356,20 @@ def apply_basecaller(params, signal, cfg: BasecallerConfig,
     model onto the registry's accelerated serving path: integer
     ``quant_matmul`` projections + the fused ``gru_cell`` kernel.  Leave it
     None for training — the backend path carries no STE gradients.
+
+    Polymorphic over ``params``: a float checkpoint pytree quantizes
+    weights in-trace (training, or the legacy repack-per-call serving
+    path); a ``PackedParams`` artifact consumes its pre-quantized weights
+    as-is — ``fq_weight`` becomes the identity and the trace carries zero
+    weight-quantization ops (asserted by ``tests/test_packed.py``).
     """
+    if is_packed(params):
+        if backend is None:
+            raise ValueError(
+                "PackedParams is a serving artifact: pass a kernel Backend "
+                "(training uses float params + the fake-quant STE path)")
+        cfg = cfg.with_quant(cfg.quant.as_prequantized())
+        params = params.as_tree()
     x = signal
     for p, spec in zip(params["conv"], cfg.conv):
         x = jax.nn.relu(_conv1d(x, p["w"], p["b"], spec.stride, cfg.quant,
@@ -289,9 +387,22 @@ def apply_basecaller(params, signal, cfg: BasecallerConfig,
     if backend is None:
         logits = qdense(x, params["fc"]["w"], cfg.quant, params["fc"]["b"])
     else:
-        logits = _qdense_backend(x, params["fc"]["w"], cfg.quant, backend,
+        logits = _qdense_backend(x, params["fc"], cfg.quant, backend,
                                  params["fc"]["b"])
     return jax.nn.log_softmax(logits, axis=-1)
+
+
+def apply_basecaller_packed(packed: PackedParams, signal,
+                            cfg: BasecallerConfig,
+                            backend: Optional[Backend] = None):
+    """Serving forward over the quantize-once artifact (explicit-name
+    alias of the polymorphic ``apply_basecaller``).  Serving only:
+    requires a ``backend``; bitwise identical to the repack-per-call path
+    on every backend."""
+    if not is_packed(packed):
+        raise TypeError("apply_basecaller_packed wants PackedParams "
+                        "(build one with pack_basecaller)")
+    return apply_basecaller(packed, signal, cfg, backend)
 
 
 # ---------------------------------------------------------------------------

@@ -25,7 +25,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantConfig, qdense
+from repro.core.quant import QuantConfig, fq_weight, qdense
 from repro.dist.sharding import constrain
 from repro.models.layers import (MoEConfig, SSMConfig, apply_rope,
                                  decode_attention, flash_attention,
@@ -597,3 +597,55 @@ def lm_loss(params, cfg: LMConfig, batch):
     if cfg.moe is not None:
         loss = loss + 0.01 * aux["lb_loss"]
     return loss, {"ce": loss, **aux}
+
+
+# ---------------------------------------------------------------------------
+# quantize-once serving artifact
+# ---------------------------------------------------------------------------
+
+# the sub-dicts / matrix names ``qdense`` weight-quantizes in-trace; MoE
+# experts (``moe_ff``), mamba mixers and norms never quantize their
+# weights, so packing must leave them untouched to stay bitwise identical
+_QDENSE_BLOCK_KEYS = ("attn", "attn_a", "attn_b", "xattn", "mlp")
+_QDENSE_MAT_KEYS = ("wq", "wk", "wv", "wo", "w1", "w2", "w3")
+
+
+def pack_lm_serving(params, cfg: LMConfig):
+    """(checkpoint, cfg) -> (packed params, serving cfg): quantize ONCE.
+
+    Snaps every matrix that ``qdense`` would fake-quantize in-trace to the
+    b-bit grid at pack time — per LAYER (a ``vmap`` over the stacked
+    ``blocks`` leaves, matching the per-slice scales the scan body
+    computes) — and returns a config whose ``quant.weights_prequantized``
+    makes ``fq_weight`` the identity.  Tied embeddings are materialized
+    into an explicit pre-snapped ``head`` (the float ``embed`` table keeps
+    serving the lookup path untouched).  Bitwise identical to the per-call
+    quantization it replaces; a no-op when quantization is off.
+    """
+    q = cfg.quant
+    if not q.enabled or q.weights_prequantized:
+        return params, cfg
+    snap = jax.jit(lambda w: fq_weight(w, q))
+    snap_stacked = jax.jit(jax.vmap(lambda w: fq_weight(w, q)))
+
+    def snap_blocks(blocks):
+        out = dict(blocks)
+        for bk in _QDENSE_BLOCK_KEYS:
+            if bk in blocks:
+                sub = dict(blocks[bk])
+                for mk in _QDENSE_MAT_KEYS:
+                    if mk in sub:
+                        sub[mk] = snap_stacked(sub[mk])
+                out[bk] = sub
+        return out
+
+    packed = dict(params)
+    packed["blocks"] = snap_blocks(params["blocks"])
+    if "enc_blocks" in params:
+        packed["enc_blocks"] = snap_blocks(params["enc_blocks"])
+    if cfg.tie_embeddings:
+        packed["head"] = snap(params["embed"].T)
+        cfg = dataclasses.replace(cfg, tie_embeddings=False)
+    elif "head" in params:
+        packed["head"] = snap(params["head"])
+    return packed, dataclasses.replace(cfg, quant=q.as_prequantized())

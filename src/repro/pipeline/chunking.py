@@ -33,7 +33,14 @@ class ChunkConfig:
 
 
 def n_windows(n_samples: int, cfg: ChunkConfig) -> int:
-    """Windows covering ``n_samples`` (final partial window zero-padded)."""
+    """Windows covering ``n_samples`` (final partial window zero-padded).
+
+    An empty signal has ZERO windows — fabricating an all-zero window for
+    it would decode garbage and waste a device call; callers get an empty
+    read instead (``BasecallPipeline.basecall`` / ``BasecallEngine``).
+    """
+    if n_samples <= 0:
+        return 0
     if n_samples <= cfg.window:
         return 1
     return 1 + -(-(n_samples - cfg.window) // cfg.hop)

@@ -24,6 +24,12 @@ Three call surfaces:
                             the fused SEAT-view + consensus serving path
                             (what the serving engine batches over slots)
 plus ``trainer()`` — the warm-up/SEAT two-phase policy (pipeline/training).
+
+Serving consumes the quantize-once ``PackedParams`` artifact
+(``serving_params()``: packed lazily, cached on checkpoint identity,
+invalidated by ``init_params``/``params`` rebinds), while training keeps
+the float checkpoint — the train-vs-serve split of ARCHITECTURE.md.
+``packed=False`` preserves the legacy repack-per-call path as an oracle.
 """
 from __future__ import annotations
 
@@ -48,6 +54,27 @@ from repro.pipeline.training import PhasedTrainer, TrainPolicy
 _SCALES = {"full": lambda n: bc.PRESETS[n], "demo": bc.demo_preset,
            "tiny": bc.tiny_preset}
 
+# the LSTM "no fused kernel" notice is a property of the build, not of any
+# one pipeline — emit it once per process, not once per construction
+_LSTM_KERNEL_WARNED = False
+
+
+def _warn_lstm_once(mode: str) -> None:
+    global _LSTM_KERNEL_WARNED
+    if _LSTM_KERNEL_WARNED:
+        return
+    _LSTM_KERNEL_WARNED = True
+    warnings.warn(
+        "LSTM stacks have no fused kernel: the recurrent loop runs "
+        "on the fake-quant path; only projections use the integer "
+        f"backend ({mode}).", stacklevel=3)
+
+
+def _reset_lstm_warning() -> None:
+    """Test hook: make the next LSTM pipeline warn again."""
+    global _LSTM_KERNEL_WARNED
+    _LSTM_KERNEL_WARNED = False
+
 
 @dataclasses.dataclass
 class BasecallResult:
@@ -60,6 +87,14 @@ class BasecallResult:
     def sequence(self, alphabet: str = "ACGT") -> str:
         return "".join(alphabet[b] for b in self.read[: self.length])
 
+    @classmethod
+    def empty(cls, max_read_len: int) -> "BasecallResult":
+        """The zero-window result (empty signal): one definition shared by
+        the pipeline and the engine so they cannot diverge."""
+        return cls(read=np.full((max_read_len,), -1, np.int32), length=0,
+                   window_reads=np.zeros((0, max_read_len), np.int32),
+                   window_lengths=np.zeros((0,), np.int32))
+
 
 class BasecallPipeline:
     def __init__(self, mcfg: bc.BasecallerConfig, *,
@@ -68,6 +103,7 @@ class BasecallPipeline:
                  chunk: Optional[chunking.ChunkConfig] = None,
                  beam_width: int = 5,
                  max_read_len: Optional[int] = None,
+                 packed: bool = True,
                  params=None):
         self.mcfg = mcfg
         self.backend = (backend if isinstance(backend, Backend)
@@ -83,13 +119,15 @@ class BasecallPipeline:
                 f"{mcfg.input_len}")
         self.beam_width = beam_width
         self.max_read_len = max_read_len or mcfg.output_len
+        self.packed = packed
+        # id(float tree) -> (float tree, artifact); the strong ref pins the
+        # id. Small FIFO so pipeline-default + engine/params= overrides of
+        # different checkpoints coexist without repacking each other out.
+        self._pack_cache: dict = {}
         self.params = params
         self._trainer: Optional[PhasedTrainer] = None
         if mcfg.rnn_type == "lstm" and self.backend.mode != "ref":
-            warnings.warn(
-                "LSTM stacks have no fused kernel: the recurrent loop runs "
-                "on the fake-quant path; only projections use the integer "
-                f"backend ({self.backend.mode}).", stacklevel=2)
+            _warn_lstm_once(self.backend.mode)
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -112,9 +150,48 @@ class BasecallPipeline:
             mcfg = mcfg.with_quant(quant)
         return cls(mcfg, backend=backend, **kw)
 
+    # -- params + the quantize-once serving artifact -----------------------
+    @property
+    def params(self):
+        """The float training checkpoint (pack-source for serving)."""
+        return self._params_value
+
+    @params.setter
+    def params(self, value):
+        # any rebind (init_params, trainer checkpoint) invalidates the
+        # packed artifacts so serving repacks from the new generation
+        self._params_value = value
+        self._pack_cache.clear()
+
     def init_params(self, key):
         self.params = bc.init_basecaller(key, self.mcfg)
         return self.params
+
+    def serving_params(self, params=None):
+        """The weights the serving closures consume.
+
+        With ``packed=True`` (default) this is the quantize-once
+        ``PackedParams`` artifact: built lazily on first use and cached
+        keyed on the float tree's identity (a small bounded cache, so the
+        pipeline default and ``params=`` overrides — e.g. an engine
+        serving a different checkpoint — each pack once).  ``init_params``
+        / ``pipe.params = ...`` rebinds clear the cache, so a checkpoint
+        re-trained mid-session is re-packed, never served stale.
+        ``packed=False`` returns the float tree (the legacy
+        repack-per-call path, kept as the benchmark baseline and
+        differential oracle).
+        """
+        p = self._params(params)
+        if not self.packed or bc.is_packed(p):
+            return p
+        hit = self._pack_cache.get(id(p))
+        if hit is not None and hit[0] is p:
+            return hit[1]
+        artifact = bc.pack_basecaller(p, self.mcfg)
+        if len(self._pack_cache) >= 4:                   # bounded, FIFO
+            self._pack_cache.pop(next(iter(self._pack_cache)))
+        self._pack_cache[id(p)] = (p, artifact)
+        return artifact
 
     def data_config(self, *, kmer: int = 1, mean_dwell: float = 6.0,
                     max_label_len: Optional[int] = None
@@ -196,7 +273,7 @@ class BasecallPipeline:
         regardless of read length; the final partial batch is padded to
         the batch shape (one compiled program) and trimmed on host.
         """
-        params = self._params(params)
+        params = self.serving_params(params)
         windows = chunking.chunk_signal(signal, self.chunk)
         frame_lens = self.window_logit_lengths(np.asarray(signal).shape[0])
         N = windows.shape[0]
@@ -225,6 +302,9 @@ class BasecallPipeline:
         for r, l in self.basecall_iter(signal, params):
             reads.append(r)
             lens.append(l)
+        if not reads:
+            # empty signal => zero windows: an empty read, not a crash
+            return BasecallResult.empty(self.max_read_len)
         reads = np.concatenate(reads)
         lens = np.concatenate(lens)
         if reads.shape[0] == 1:
@@ -245,7 +325,7 @@ class BasecallPipeline:
         top_len (B,), top_score (B,)) — the SEAT 3-view vote next to the
         center view's best beam, all in one jitted call.
         """
-        return self._windows_fused(self._params(params),
+        return self._windows_fused(self.serving_params(params),
                                    jnp.asarray(signal_batch))
 
     # -- training ----------------------------------------------------------

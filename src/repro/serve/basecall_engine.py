@@ -44,9 +44,12 @@ class BasecallEngine:
     def __init__(self, pipeline: BasecallPipeline, params=None,
                  batch_slots: int = 8):
         self.pipe = pipeline
-        self.params = params if params is not None else pipeline.params
-        if self.params is None:
+        if params is None and pipeline.params is None:
             raise ValueError("BasecallEngine needs initialized params")
+        # the engine holds the quantize-once serving artifact, not float
+        # weights: every step consumes the same PackedParams the pipeline
+        # serves, which is what keeps engine ≡ pipeline bit for bit
+        self.params = pipeline.serving_params(params)
         self.B = batch_slots
         self.sched: SlotScheduler[ReadRequest] = SlotScheduler(batch_slots)
         ck = pipeline.chunk
@@ -65,7 +68,14 @@ class BasecallEngine:
         req.cursor = 0
 
     def _admit(self):
-        self.sched.admit(self._admit_one)
+        admitted = self.sched.admit(self._admit_one)
+        # an empty signal chunks to zero windows: retire it immediately
+        # with an empty read instead of feeding step() an empty lane
+        for slot in admitted:
+            req = self.sched.slots[slot]
+            if req is not None and req.windows.shape[0] == 0:
+                self._finalize(req)
+                self.sched.retire(slot, req.rid)
 
     # -- stepping ----------------------------------------------------------
     def active_mask(self) -> np.ndarray:
@@ -95,6 +105,9 @@ class BasecallEngine:
                 self.sched.retire(slot, req.rid)
 
     def _finalize(self, req: ReadRequest):
+        if not req.reads:                      # zero-window (empty) signal
+            req.result = BasecallResult.empty(self.pipe.max_read_len)
+            return
         reads = np.stack(req.reads)
         lens = np.asarray(req.lengths, np.int32)
         if reads.shape[0] == 1:

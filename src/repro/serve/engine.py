@@ -44,8 +44,15 @@ class Request:
 
 class ServingEngine:
     def __init__(self, params, cfg: lm_lib.LMConfig, batch_slots: int = 8,
-                 max_len: int = 256):
+                 max_len: int = 256, pack: bool = True):
         assert cfg.embed_inputs, "engine serves token models"
+        if pack:
+            # the engine holds the quantize-once serving artifact: every
+            # qdense weight pre-snapped to the b-bit grid, so the jitted
+            # decode/fold traces carry no weight-quantization ops (a no-op
+            # when cfg.quant is disabled).  pack=False keeps the float
+            # tree + per-call quantization as the differential oracle.
+            params, cfg = lm_lib.pack_lm_serving(params, cfg)
         self.params = params
         self.cfg = cfg
         self.B = batch_slots

@@ -46,6 +46,26 @@ def test_golden_consensus_identity(golden_pipeline, golden_read):
         f"consensus identity {ident:.3f} (len {res.length} vs {len(seq)})")
 
 
+def test_golden_packed_bitwise_equals_repack(golden_pipeline, golden_read):
+    """PR 3 acceptance: the quantize-once PackedParams serving path is
+    bitwise identical to the pre-refactor repack-per-call path on the
+    golden read — window reads, lengths AND voted consensus."""
+    from repro.pipeline import BasecallPipeline
+
+    pipe, params, _ = golden_pipeline
+    _, sig = golden_read
+    unpacked = BasecallPipeline(pipe.mcfg, backend=pipe.backend,
+                                scfg=pipe.scfg, chunk=pipe.chunk,
+                                beam_width=pipe.beam_width, packed=False,
+                                params=params)
+    want = unpacked.basecall(sig)            # per-call weight repacking
+    got = pipe.basecall(sig, params)         # packed artifact (default)
+    np.testing.assert_array_equal(got.window_reads, want.window_reads)
+    np.testing.assert_array_equal(got.window_lengths, want.window_lengths)
+    assert got.length == want.length
+    np.testing.assert_array_equal(got.read, want.read)
+
+
 def test_golden_consensus_matches_engine(golden_pipeline, golden_read):
     """The continuous-batching engine must reproduce the pipeline's golden
     consensus exactly (same windows, same logit_lengths, same decoder)."""

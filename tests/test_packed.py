@@ -1,0 +1,373 @@
+"""The quantize-once serving artifact contract (PR 3).
+
+Three obligations:
+
+1. **Bitwise parity** — `pack_basecaller` + the packed apply path produce
+   bit-for-bit the outputs of the legacy repack-per-call serving path, on
+   every backend, end to end through `BasecallPipeline` and
+   `BasecallEngine`; same for `pack_lm_serving` + `ServingEngine`.
+2. **Zero weight-quantization ops in the serving trace** — a dataflow
+   analysis over the jitted jaxpr: no quantization primitive (round /
+   clamp / weight-scale reduce_max / float->int8 convert) may consume a
+   value derived ONLY from weights.  The repack-per-call trace is the
+   positive control (the detector must fire there).
+3. **Cache discipline** — the pipeline packs once per checkpoint identity
+   and re-packs when `init_params` / `pipe.params = ...` rebinds.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import QuantConfig
+from repro.kernels.quant_matmul.ops import qmm_packed
+from repro.core import quant as quant_lib
+from repro.kernels.registry import Backend
+from repro.models import basecaller as bc
+from repro.models import lm as lm_lib
+from repro.pipeline import BasecallPipeline
+from repro.serve.basecall_engine import BasecallEngine, ReadRequest
+from repro.serve.engine import Request, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+QUANT = QuantConfig(enabled=True, bits_w=5, bits_a=5)
+BACKENDS = ["auto", "interpret", "ref"]
+
+
+def _pipe(backend="ref", packed=True, name="guppy", **kw):
+    pipe = BasecallPipeline.from_preset(name, scale="tiny", quant=QUANT,
+                                        backend=backend, beam_width=3,
+                                        packed=packed, **kw)
+    pipe.init_params(jax.random.PRNGKey(0))
+    return pipe
+
+
+def _signal(n, seed=0):
+    return np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# 1. bitwise parity: packed artifact == repack-per-call, every backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", ["guppy", "chiron"])  # GRU + LSTM families
+def test_packed_apply_bitwise_equals_repack(backend, name):
+    cfg = bc.tiny_preset(name).with_quant(QUANT)
+    params = bc.init_basecaller(jax.random.PRNGKey(0), cfg)
+    packed = bc.pack_basecaller(params, cfg)
+    sig = jnp.asarray(_signal(3 * cfg.input_len, seed=1).reshape(
+        3, cfg.input_len, 1))
+    be = Backend(backend)
+    a = jax.jit(lambda p, s: bc.apply_basecaller(p, s, cfg, backend=be))(
+        params, sig)
+    b = jax.jit(lambda p, s: bc.apply_basecaller(p, s, cfg, backend=be))(
+        packed, sig)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packed_apply_bitwise_quant_disabled():
+    cfg = bc.tiny_preset("guppy")            # fp path: packing is a no-op
+    params = bc.init_basecaller(jax.random.PRNGKey(0), cfg)
+    packed = bc.pack_basecaller(params, cfg)
+    sig = jnp.asarray(_signal(2 * cfg.input_len).reshape(2, cfg.input_len, 1))
+    be = Backend("ref")
+    a = bc.apply_basecaller(params, sig, cfg, backend=be)
+    b = bc.apply_basecaller(packed, sig, cfg, backend=be)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pipeline_packed_bitwise_equals_unpacked(backend):
+    sig = _signal(3 * 120 + 31, seed=2)
+    un = _pipe(backend, packed=False)
+    pk = BasecallPipeline(un.mcfg, backend=backend, scfg=un.scfg,
+                          chunk=un.chunk, beam_width=un.beam_width,
+                          packed=True, params=un.params)
+    a, b = un.basecall(sig), pk.basecall(sig)
+    np.testing.assert_array_equal(a.window_reads, b.window_reads)
+    np.testing.assert_array_equal(a.window_lengths, b.window_lengths)
+    assert a.length == b.length
+    np.testing.assert_array_equal(a.read[: a.length], b.read[: b.length])
+
+
+def test_fused_window_path_packed_parity():
+    un = _pipe("ref", packed=False)
+    pk = BasecallPipeline(un.mcfg, backend="ref", scfg=un.scfg,
+                          beam_width=un.beam_width, packed=True,
+                          params=un.params)
+    batch = jnp.asarray(_signal(
+        2 * (un.mcfg.input_len + 2 * un.scfg.margin), seed=3).reshape(
+        2, un.mcfg.input_len + 2 * un.scfg.margin, 1))
+    for a, b in zip(un.basecall_windows(batch), pk.basecall_windows(batch)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_holds_packed_artifact_and_matches_pipeline():
+    pipe = _pipe("ref", packed=True)
+    eng = BasecallEngine(pipe, batch_slots=2)
+    assert bc.is_packed(eng.params)          # the artifact, not float weights
+    sigs = [_signal(n, seed=20 + i) for i, n in enumerate((130, 470))]
+    for i, s in enumerate(sigs):
+        eng.submit(ReadRequest(rid=i, signal=s))
+    done = eng.run()
+    for i, s in enumerate(sigs):
+        want = pipe.basecall(s)
+        np.testing.assert_array_equal(done[i].result.read[: want.length],
+                                      want.read[: want.length])
+        assert done[i].result.length == want.length
+
+
+def test_qmm_packed_matches_reference():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((5, 24)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((24, 12)).astype(np.float32))
+    wq, sw = quant_lib.pack_weight(w, 5)
+    got = qmm_packed(x, wq, sw, bits_a=5, backend="ref")
+    want = quant_lib.packed_dense_reference(x, wq, sw, bits_a=5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 2. jaxpr inspection: the packed serving trace quantizes no weights
+# ---------------------------------------------------------------------------
+#
+# Dataflow taint analysis: a value is "weight-only" if it derives from
+# params leaves alone (never mixed with an activation).  Weight
+# quantization == a quantization primitive consuming a weight-only value;
+# activation packing keeps its round/clamp ops (they consume signal-mixed
+# values) and is NOT flagged.
+
+_QUANT_PRIMS = {"round", "clamp", "reduce_max"}
+
+
+def _is_quant_eqn(eqn):
+    if eqn.primitive.name in _QUANT_PRIMS:
+        return True
+    if eqn.primitive.name == "convert_element_type":
+        return eqn.params.get("new_dtype") in (jnp.int8.dtype, jnp.int16.dtype)
+    return False
+
+
+def _sub_jaxprs(eqn):
+    import jax.extend.core as jex_core
+    out = []
+    for v in eqn.params.values():
+        vals = v if isinstance(v, (list, tuple)) else [v]
+        for item in vals:
+            if isinstance(item, jax.core.ClosedJaxpr):
+                out.append(item.jaxpr)
+            elif isinstance(item, jex_core.Jaxpr if hasattr(jex_core, "Jaxpr")
+                            else jax.core.Jaxpr):
+                # raw (pallas) jaxprs: block refs don't map positionally to
+                # operands — skip; quantization never lives inside kernels
+                pass
+    return out
+
+
+def _weight_quant_eqns(jaxpr, tainted):
+    """Recursively collect quantization eqns whose inputs are all
+    weight-derived.  ``tainted`` is the set of weight-only Vars."""
+    found = []
+    for eqn in jaxpr.eqns:
+        invars = [v for v in eqn.invars if not isinstance(v, jax.core.Literal)]
+        all_w = bool(invars) and all(v in tainted for v in invars)
+        for sub in _sub_jaxprs(eqn):
+            sub_taint = set()
+            # positional alignment, suffix-aligned when lengths differ
+            # (cond carries a leading predicate operand)
+            offset = len(eqn.invars) - len(sub.invars)
+            for i, sv in enumerate(sub.invars):
+                ov = eqn.invars[i + offset] if 0 <= i + offset < len(
+                    eqn.invars) else None
+                if (ov is not None and not isinstance(ov, jax.core.Literal)
+                        and ov in tainted):
+                    sub_taint.add(sv)
+            found += _weight_quant_eqns(sub, sub_taint)
+            if len(sub.outvars) == len(eqn.outvars):
+                sub_out_taint = _outvar_taint(sub, sub_taint)
+                for ov, t in zip(eqn.outvars, sub_out_taint):
+                    if t:
+                        tainted.add(ov)
+        if all_w:
+            if _is_quant_eqn(eqn):
+                found.append(eqn)
+            for ov in eqn.outvars:
+                tainted.add(ov)
+    return found
+
+
+def _outvar_taint(jaxpr, tainted):
+    tainted = set(tainted)
+    for eqn in jaxpr.eqns:
+        invars = [v for v in eqn.invars if not isinstance(v, jax.core.Literal)]
+        if invars and all(v in tainted for v in invars):
+            for ov in eqn.outvars:
+                tainted.add(ov)
+    return [not isinstance(v, jax.core.Literal) and v in tainted
+            for v in jaxpr.outvars]
+
+
+def _count_weight_quant_ops(params, cfg, backend):
+    be = Backend(backend)
+    sig = jnp.zeros((2, cfg.input_len, 1), jnp.float32)
+    closed = jax.make_jaxpr(
+        lambda p, s: bc.apply_basecaller(p, s, cfg, backend=be))(params, sig)
+    n_param_leaves = len(jax.tree_util.tree_leaves(params))
+    tainted = set(closed.jaxpr.invars[:n_param_leaves])
+    return len(_weight_quant_eqns(closed.jaxpr, tainted))
+
+
+@pytest.mark.parametrize("name", ["guppy", "chiron"])
+def test_packed_trace_has_zero_weight_quant_ops(name):
+    cfg = bc.tiny_preset(name).with_quant(QUANT)
+    params = bc.init_basecaller(jax.random.PRNGKey(0), cfg)
+    packed = bc.pack_basecaller(params, cfg)
+    # positive control: the detector must fire on the repack-per-call path
+    assert _count_weight_quant_ops(params, cfg, "ref") > 0
+    # the artifact's serving trace quantizes no weights
+    assert _count_weight_quant_ops(packed, cfg, "ref") == 0
+
+
+def test_packed_decode_windows_trace_has_zero_weight_quant_ops():
+    """End to end: the pipeline's whole jitted DNN+decode serving stage."""
+    pipe = _pipe("ref", packed=True)
+    packed = pipe.serving_params()
+    windows = jnp.zeros((2, pipe.mcfg.input_len, 1), jnp.float32)
+    lengths = jnp.full((2,), pipe.mcfg.input_len, jnp.int32)
+    mcfg, be, W, L = pipe.mcfg, pipe.backend, pipe.beam_width, \
+        pipe.max_read_len
+
+    from repro.core import ctc as ctc_lib
+
+    def stage(p, w, ll):
+        lps = bc.apply_basecaller(p, w, mcfg, backend=be)
+        reads, lens, _ = ctc_lib.ctc_beam_search_hash_batch(
+            lps, beam_width=W, max_len=L, logit_lengths=ll, backend=be)
+        return reads[:, 0], lens[:, 0]
+
+    closed = jax.make_jaxpr(stage)(packed, windows, lengths)
+    n = len(jax.tree_util.tree_leaves(packed))
+    tainted = set(closed.jaxpr.invars[:n])
+    assert _weight_quant_eqns(closed.jaxpr, tainted) == []
+
+
+def test_lm_packed_trace_has_zero_weight_quant_ops():
+    """Guard for ``pack_lm_serving``'s snap allowlist: if a new ``qdense``
+    weight is added to the LM without extending the allowlist, it would be
+    served UNQUANTIZED under ``weights_prequantized`` — but its fq ops in
+    the unpacked trace would vanish from the packed one without a matching
+    pre-snap, while any still-quantizing weight shows up here as a
+    weight-only quant op.  Either way this asserts the packed LM trace
+    quantizes no weights at all."""
+    cfg = lm_lib.LMConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                          d_ff=64, vocab_size=64, quant=QUANT, remat=False)
+    params = lm_lib.init_lm(jax.random.PRNGKey(0), cfg)
+    packed, scfg = lm_lib.pack_lm_serving(params, cfg)
+    batch = {"tokens": jnp.zeros((2, 5), jnp.int32)}
+
+    def count(p, c):
+        closed = jax.make_jaxpr(
+            lambda p, b: lm_lib.forward(p, c, b)[0])(p, batch)
+        n = len(jax.tree_util.tree_leaves(p))
+        tainted = set(closed.jaxpr.invars[:n])
+        return len(_weight_quant_eqns(closed.jaxpr, tainted))
+
+    assert count(params, cfg) > 0       # positive control: per-call path
+    assert count(packed, scfg) == 0     # the artifact quantizes no weights
+
+
+# ---------------------------------------------------------------------------
+# 3. cache discipline: pack once, invalidate on rebind
+# ---------------------------------------------------------------------------
+
+def test_pipeline_packs_once_and_repacks_on_rebind():
+    pipe = _pipe("ref", packed=True)
+    a = pipe.serving_params()
+    assert bc.is_packed(a)
+    assert pipe.serving_params() is a            # cached, same checkpoint
+    pipe.basecall(_signal(130))
+    assert pipe.serving_params() is a            # serving reused the cache
+
+    override = jax.tree_util.tree_map(lambda x: x + 0.1, pipe.params)
+    d = pipe.serving_params(override)            # params= override packs too
+    assert d is not a
+    # default + override artifacts coexist: alternating (pipeline serving
+    # checkpoint A, an engine serving checkpoint B) never repacks
+    assert pipe.serving_params() is a
+    assert pipe.serving_params(override) is d
+
+    pipe.init_params(jax.random.PRNGKey(1))      # new checkpoint => repack
+    b = pipe.serving_params()
+    assert b is not a
+
+    newp = jax.tree_util.tree_map(lambda x: x * 0.5, pipe.params)
+    pipe.params = newp                           # trainer-style rebind
+    c = pipe.serving_params()
+    assert c is not b and bc.is_packed(c)
+
+
+def test_unpacked_pipeline_serves_float_weights():
+    pipe = _pipe("ref", packed=False)
+    assert pipe.serving_params() is pipe.params
+    assert not bc.is_packed(pipe.serving_params())
+
+
+def test_packed_apply_requires_backend():
+    cfg = bc.tiny_preset("guppy").with_quant(QUANT)
+    params = bc.init_basecaller(jax.random.PRNGKey(0), cfg)
+    packed = bc.pack_basecaller(params, cfg)
+    sig = jnp.zeros((1, cfg.input_len, 1), jnp.float32)
+    with pytest.raises(ValueError, match="serving artifact"):
+        bc.apply_basecaller(packed, sig, cfg)
+
+
+# ---------------------------------------------------------------------------
+# LM engine: pack_lm_serving parity through continuous batching
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tie", [False, True])
+def test_lm_pack_serving_forward_bitwise(tie):
+    cfg = lm_lib.LMConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                          d_ff=64, vocab_size=64, tie_embeddings=tie,
+                          quant=QUANT)
+    params = lm_lib.init_lm(jax.random.PRNGKey(0), cfg)
+    packed, scfg = lm_lib.pack_lm_serving(params, cfg)
+    assert scfg.quant.weights_prequantized
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 9),
+                                          0, 64)}
+    a, _ = jax.jit(lambda p, b: lm_lib.forward(p, cfg, b))(params, batch)
+    b, _ = jax.jit(lambda p, b: lm_lib.forward(p, scfg, b))(packed, batch)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serving_engine_packed_matches_unpacked():
+    cfg = lm_lib.LMConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                          d_ff=64, vocab_size=64, quant=QUANT)
+    params = lm_lib.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 64, n).astype(np.int32) for n in (3, 5, 4)]
+
+    outs = []
+    for pack in (True, False):
+        eng = ServingEngine(params, cfg, batch_slots=2, max_len=64,
+                            pack=pack)
+        if pack:
+            assert eng.cfg.quant.weights_prequantized
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_tokens=6))
+        done = eng.run()
+        outs.append({i: done[i].out_tokens for i in done})
+    assert outs[0] == outs[1]
+
+
+def test_pack_lm_serving_noop_without_quant():
+    cfg = lm_lib.LMConfig(n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+                          d_ff=32, vocab_size=32)
+    params = lm_lib.init_lm(jax.random.PRNGKey(0), cfg)
+    packed, scfg = lm_lib.pack_lm_serving(params, cfg)
+    assert packed is params and scfg is cfg

@@ -1,6 +1,7 @@
 """BasecallPipeline acceptance: chunk/stitch correctness, backend parity,
 streaming equivalence, the phased trainer, and the base-calling engine."""
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -102,6 +103,36 @@ def test_basecall_single_window_read():
     res = pipe.basecall(sig)
     assert res.window_reads.shape[0] == 1
     assert res.length == int(res.window_lengths[0])
+
+
+def test_basecall_short_and_empty_signals():
+    """Regression: signals shorter than one chunk hop (or empty) must
+    produce an empty/short-read BasecallResult, not a ``ValueError`` out
+    of ``np.concatenate([])``."""
+    pipe = _pipe()
+    hop = pipe.chunk.hop
+
+    short = pipe.basecall(_long_signal(hop - 1, seed=4))  # < one hop
+    assert short.window_reads.shape[0] == 1               # one padded window
+    assert short.length == int(short.window_lengths[0])
+
+    empty = pipe.basecall(np.zeros((0,), np.float32))     # zero windows
+    assert empty.length == 0
+    assert empty.sequence() == ""
+    assert empty.window_reads.shape == (0, pipe.max_read_len)
+    assert empty.window_lengths.shape == (0,)
+    assert list(pipe.basecall_iter(np.zeros((0,), np.float32))) == []
+
+
+def test_engine_handles_empty_signal():
+    pipe = _pipe()
+    eng = BasecallEngine(pipe, batch_slots=2)
+    eng.submit(ReadRequest(rid=0, signal=np.zeros((0,), np.float32)))
+    eng.submit(ReadRequest(rid=1, signal=_long_signal(130, seed=5)))
+    done = eng.run()
+    assert done[0].result.length == 0
+    want = pipe.basecall(_long_signal(130, seed=5))
+    assert done[1].result.length == want.length
 
 
 # ---------------------------------------------------------------------------
@@ -243,7 +274,16 @@ def test_engine_handles_multichannel_signals():
     assert done[0].result is not None and done[0].result.length >= 0
 
 
-def test_lstm_backend_warns_partial_acceleration():
+def test_lstm_backend_warns_partial_acceleration_once_per_process():
+    from repro.pipeline import pipeline as pipeline_mod
+    pipeline_mod._reset_lstm_warning()
+    # first LSTM pipeline of the process warns...
     with pytest.warns(UserWarning, match="LSTM"):
         BasecallPipeline.from_preset("chiron", scale="tiny",
                                      backend="interpret")
+    # ...every later construction is silent (deduped, not dropped)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        BasecallPipeline.from_preset("chiron", scale="tiny",
+                                     backend="interpret")
+        BasecallPipeline.from_preset("chiron", scale="tiny", backend="auto")
