@@ -1,0 +1,161 @@
+"""Open-loop serving load: sustained requests/s under continuous batching.
+
+The paper's headline claim is end-to-end base-calling THROUGHPUT (6x vs
+prior PIMs, Fig 9/26 are per-stage sweeps); this benchmark measures the
+serving counterpart: an open-loop load generator (arrivals on a fixed
+schedule, independent of completions — so queueing is real, not
+self-throttled) drives ``repro.serve.Server`` over BOTH engines and
+reports requests/s, slot occupancy, queue behaviour, and p50/p99 latency
+from the server's own ``metrics()`` snapshot.
+
+    PYTHONPATH=src python benchmarks/fig_serve_load.py --smoke
+    PYTHONPATH=src python benchmarks/fig_serve_load.py \
+        --engine basecall --requests 32 --rate 8 --slots 8
+
+Also runs inside the harness: ``python -m benchmarks.run --only serve_load``.
+"""
+import argparse
+import time
+
+import numpy as np
+
+
+def _build_basecall_server(slots: int, backpressure: str, max_queue: int):
+    import jax
+
+    from repro.core.quant import QuantConfig
+    from repro.pipeline import BasecallPipeline
+    from repro.serve import Server
+    from repro.serve.basecall_engine import BasecallEngine
+
+    pipe = BasecallPipeline.from_preset(
+        "guppy", scale="tiny",
+        quant=QuantConfig(enabled=True, bits_w=5, bits_a=5),
+        backend="auto", beam_width=3)
+    pipe.init_params(jax.random.PRNGKey(0))
+    eng = BasecallEngine(pipe, batch_slots=slots)
+    return Server(eng, max_queue=max_queue, backpressure=backpressure), pipe
+
+
+def _basecall_requests(pipe, n: int, seed: int = 0):
+    from repro.serve import BasecallRequest
+
+    rng = np.random.default_rng(seed)
+    win = pipe.mcfg.input_len
+    # mixed read lengths: 1-4 windows, so short reads retire early
+    return [BasecallRequest(signal=rng.standard_normal(
+        int(rng.integers(1, 5) * win * 0.9)).astype(np.float32))
+        for _ in range(n)]
+
+
+def _build_lm_server(slots: int, backpressure: str, max_queue: int):
+    import jax
+
+    from repro.models import lm as lm_lib
+    from repro.serve import Server
+    from repro.serve.engine import ServingEngine
+
+    cfg = lm_lib.LMConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                          d_ff=64, vocab_size=64, remat=False)
+    params = lm_lib.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_slots=slots, max_len=64)
+    return Server(eng, max_queue=max_queue, backpressure=backpressure), cfg
+
+
+def _lm_requests(cfg, n: int, max_tokens: int, seed: int = 0):
+    from repro.serve import LMRequest
+
+    rng = np.random.default_rng(seed)
+    return [LMRequest(prompt=rng.integers(0, cfg.vocab_size,
+                                          int(rng.integers(2, 8))),
+                      max_tokens=int(rng.integers(2, max_tokens + 1)))
+            for _ in range(n)]
+
+
+def open_loop(srv, requests, rate: float):
+    """Drive ``srv`` under a fixed arrival schedule (``rate`` req/s).
+
+    Arrivals are submitted when their scheduled time passes regardless of
+    how far behind the server is — the open-loop discipline that makes
+    sustained throughput and queue depth meaningful."""
+    t0 = srv.clock()
+    arrivals = [i / rate for i in range(len(requests))]
+    i = 0
+    max_queue_depth = 0
+    while i < len(requests) or srv.pending():
+        now = srv.clock() - t0
+        while i < len(requests) and arrivals[i] <= now:
+            srv.submit(requests[i])
+            i += 1
+        max_queue_depth = max(max_queue_depth,
+                              len(srv.engine.sched.queue))
+        if srv.pending():
+            srv.step()
+        elif i < len(requests):
+            time.sleep(min(arrivals[i] - now, 0.005))
+    return max_queue_depth
+
+
+def _one_engine(name: str, srv, requests, rate: float, units_of):
+    # warm the jitted paths so compile time doesn't pollute the open loop
+    srv.submit(requests[0]).result()
+    srv.reset_metrics()
+    depth = open_loop(srv, requests, rate)
+    m = srv.metrics()
+    rows = m.rows(prefix=f"serve_load/{name}")
+    rows.append((f"serve_load/{name}/max_queue_depth", str(depth),
+                 f"offered rate {rate:.1f} req/s"))
+    units = sum(units_of(r) for r in srv.results.values() if r.ok)
+    rows.append((f"serve_load/{name}/units_per_s",
+                 f"{units / m.elapsed_s:.1f}",
+                 "decoded windows/s" if name == "basecall" else "tokens/s"))
+    return rows
+
+
+def run(smoke: bool = True, engine: str = "both", requests: int = None,
+        rate: float = None, slots: int = None, max_tokens: int = 8,
+        backpressure: str = "shed-oldest"):
+    n = requests or (6 if smoke else 32)
+    slots = slots or (2 if smoke else 8)
+    rate = rate or (4.0 if smoke else 8.0)
+    rows = []
+    if engine in ("both", "basecall"):
+        srv, pipe = _build_basecall_server(slots, backpressure,
+                                           max_queue=max(2 * n, 4))
+        reqs = _basecall_requests(pipe, n)
+        rows += _one_engine("basecall", srv, reqs, rate,
+                            lambda r: r.value.window_reads.shape[0])
+    if engine in ("both", "lm"):
+        srv, cfg = _build_lm_server(slots, backpressure,
+                                    max_queue=max(2 * n, 4))
+        reqs = _lm_requests(cfg, n, max_tokens)
+        rows += _one_engine("lm", srv, reqs, rate,
+                            lambda r: len(r.value))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs / few requests (CI)")
+    ap.add_argument("--engine", default="both",
+                    choices=["both", "basecall", "lm"])
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="offered load, requests/s")
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--max-tokens", type=int, default=8)
+    ap.add_argument("--backpressure", default="shed-oldest",
+                    choices=["reject", "block", "shed-oldest"])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, val, derived in run(smoke=args.smoke, engine=args.engine,
+                                  requests=args.requests, rate=args.rate,
+                                  slots=args.slots,
+                                  max_tokens=args.max_tokens,
+                                  backpressure=args.backpressure):
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,8 +36,8 @@ def main() -> None:
     registry.set_default_backend(args.backend)
 
     from . import (fig7_quant_throughput, fig9_breakdown, fig21_seat,
-                   fig24_pim, fig25_adc, fig26_beamwidth, roofline,
-                   table3_models)
+                   fig24_pim, fig25_adc, fig26_beamwidth, fig_serve_load,
+                   roofline, table3_models)
     suites = [
         ("table3", table3_models.run),
         ("fig7", fig7_quant_throughput.run),
@@ -48,6 +48,7 @@ def main() -> None:
         ("fig25", fig25_adc.run),
         ("fig26", fig26_beamwidth.run),
         ("roofline", roofline.run),
+        ("serve_load", lambda: fig_serve_load.run(smoke=args.quick)),
     ]
     print("name,us_per_call,derived")
     failures = 0

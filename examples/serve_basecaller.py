@@ -7,9 +7,11 @@ Two serving modes, both through the unified pipeline API:
 * fixed-window batches via ``BasecallPipeline.basecall_windows`` — the
   paper's fused quantized-DNN -> CTC beam -> 3-view vote in ONE jitted
   call per batch ("everything on one engine", DESIGN.md §4);
-* long raw reads via ``BasecallEngine`` — slot-based continuous batching
-  over signal windows: short reads retire early, long reads never block
-  the pool (the LM engine's scheduler, reused).
+* long raw reads via the ``repro.serve.Server`` request lifecycle over
+  ``BasecallEngine``: submit -> bounded queue -> slot-based continuous
+  batching over signal windows -> per-window streaming -> retire.  Short
+  reads retire early, long reads never block the pool, and the run ends
+  with a ``metrics()`` snapshot (requests/s, occupancy, p50/p99).
 """
 import argparse
 import time
@@ -22,7 +24,8 @@ from repro.core import metrics
 from repro.core.quant import QuantConfig
 from repro.data import genome
 from repro.pipeline import BasecallPipeline
-from repro.serve.basecall_engine import BasecallEngine, ReadRequest
+from repro.serve import BasecallRequest, Server
+from repro.serve.basecall_engine import BasecallEngine
 
 BASES = "ACGT"
 
@@ -61,26 +64,42 @@ def main():
     print(f"\nserved {args.requests} window batches, {total_bases} bases in "
           f"{dt:.2f}s ({total_bases/dt:.0f} bp/s)")
 
-    # --- mode 2: long reads through the continuous-batching engine ---------
+    # --- mode 2: long reads through the serving API ------------------------
     rng = np.random.default_rng(0)
     eng = BasecallEngine(pipe, batch_slots=args.slots)
+    srv = Server(eng, max_queue=max(args.requests, 1), backpressure="block")
     read_lens = [3, 1, 5, 2, 4, 1][: args.requests]
+    sigs = []
     for i, n_chunks in enumerate(read_lens):
         sig = np.concatenate([
             np.asarray(genome.batch_for_step(100 * i + j, 1, dcfg,
                                              seed=11)["signal"][0, :, 0])
             for j in range(n_chunks)])
         sig += 0.01 * rng.standard_normal(sig.shape).astype(np.float32)
-        eng.submit(ReadRequest(rid=i, signal=sig))
-    t0 = time.perf_counter()
-    done = eng.run()
-    dt = time.perf_counter() - t0
-    print(f"\ncontinuous batching: {len(done)} long reads through "
-          f"{args.slots} slots in {eng.steps} engine steps ({dt:.2f}s)")
-    for rid in sorted(done):
-        res = done[rid].result
-        print(f"  read {rid}: {done[rid].windows.shape[0]:2d} windows -> "
-              f"{res.length:3d} bases  {res.sequence()[:24]}...")
+        sigs.append(sig)
+
+    # stream the first read window by window, submit the rest as futures
+    if sigs:
+        print("\nstreaming read 0:")
+        for ev in srv.stream(BasecallRequest(signal=sigs[0])):
+            if ev.kind == "window":
+                read, length = ev.payload
+                txt = "".join(BASES[b]
+                              for b in np.asarray(read)[:length][:16])
+                print(f"  window {ev.index}: {length:3d} bases  {txt}...")
+    futs = [srv.submit(BasecallRequest(signal=s)) for s in sigs[1:]]
+    for f in futs:
+        f.result()                    # drive the loop to completion
+
+    m = srv.metrics()
+    print(f"\nserving API: {m.completed} long reads through {args.slots} "
+          f"slots in {m.steps} engine steps (occupancy {m.occupancy:.2f}, "
+          f"{m.requests_per_s:.2f} req/s, p50 {m.latency_p50_s:.3f}s "
+          f"p99 {m.latency_p99_s:.3f}s)")
+    for res in sorted(srv.results.values(), key=lambda r: r.rid):
+        bres = res.value
+        print(f"  read {res.rid}: {bres.window_reads.shape[0]:2d} windows -> "
+              f"{bres.length:3d} bases  {bres.sequence()[:24]}...")
 
 
 if __name__ == "__main__":

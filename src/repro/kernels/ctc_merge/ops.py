@@ -57,14 +57,11 @@ def _dispatch(eq, scores, *, bi, backend):
 
 
 def masked_logsumexp(eq: jnp.ndarray, scores: jnp.ndarray, *, bi: int = 128,
-                     interpret: bool | None = None,
                      backend: str | None = None) -> jnp.ndarray:
     """Batched masked logsumexp: (B, C, C) mask x (B, C) scores -> (B, C).
 
     Rows must be self-connected (eq[b,i,i]=1) so no row is empty.
     Backend resolves before the jit boundary (see quant_matmul.ops)."""
-    if interpret is not None:
-        backend = "interpret" if interpret else "pallas"
     return _dispatch(eq, scores, bi=bi,
                      backend=registry.resolve_backend(backend))
 
@@ -124,8 +121,7 @@ def _topk_dispatch(keys, pb, pnb, *, W, backend):
 
 
 def beam_merge_topk(keys: jnp.ndarray, pb: jnp.ndarray, pnb: jnp.ndarray,
-                    W: int, *, interpret: bool | None = None,
-                    backend: str | None = None):
+                    W: int, *, backend: str | None = None):
     """Merge duplicate beam candidates by integer key and keep the top W.
 
     (B, C) keys/pb/pnb -> (idx (B, W) int32, pb (B, W), pnb (B, W)):
@@ -133,8 +129,6 @@ def beam_merge_topk(keys: jnp.ndarray, pb: jnp.ndarray, pnb: jnp.ndarray,
     by total score descending with ties broken by lower index.  W > C pads
     with (C-1, NEG, NEG) lanes.  Backend resolves before the jit boundary
     (see quant_matmul.ops)."""
-    if interpret is not None:
-        backend = "interpret" if interpret else "pallas"
     return _topk_dispatch(keys, pb, pnb, W=W,
                           backend=registry.resolve_backend(backend))
 

@@ -44,14 +44,11 @@ def _dispatch(q, k_cache, v_cache, n_valid, *, groups, bl, backend):
 
 def decode_attn(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                 n_valid: jnp.ndarray, *, groups: int, bl: int = 256,
-                interpret: bool | None = None,
                 backend: str | None = None) -> jnp.ndarray:
     """Single-token GQA attention over a ring/full cache.
 
     q (B, H, D); caches (B, L, Kv, D) with H = Kv*groups; n_valid (B,).
     Backend resolves before the jit boundary (see quant_matmul.ops)."""
-    if interpret is not None:
-        backend = "interpret" if interpret else "pallas"
     return _dispatch(q, k_cache, v_cache, n_valid, groups=groups, bl=bl,
                      backend=registry.resolve_backend(backend))
 

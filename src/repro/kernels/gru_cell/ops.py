@@ -38,13 +38,10 @@ def _dispatch(x_proj, h, u, b, *, bb, backend):
 
 def gru_cell(x_proj: jnp.ndarray, h: jnp.ndarray, u: jnp.ndarray,
              b: jnp.ndarray, *, bb: int = 128,
-             interpret: bool | None = None,
              backend: str | None = None) -> jnp.ndarray:
     """Fused GRU step (x_proj (B, 3H), h (B, H), u (H, 3H), b (3H,)).
 
     Backend resolves before the jit boundary (see quant_matmul.ops)."""
-    if interpret is not None:
-        backend = "interpret" if interpret else "pallas"
     return _dispatch(x_proj, h, u, b, bb=bb,
                      backend=registry.resolve_backend(backend))
 

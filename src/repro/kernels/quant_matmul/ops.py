@@ -56,29 +56,25 @@ def _dispatch(xq, wq, x_scale, w_scale, *, bm, bn, bk, backend):
 
 def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray, x_scale: jnp.ndarray,
                  w_scale: jnp.ndarray, *, bm: int = 128, bn: int = 128,
-                 bk: int = 128, interpret: bool | None = None,
+                 bk: int = 128,
                  backend: str | None = None) -> jnp.ndarray:
     """Quantized matmul over int8 codes; pads ragged shapes to MXU tiles.
 
-    ``interpret`` is a deprecation shim (True -> backend="interpret",
-    False -> "pallas"); prefer ``backend``.  The backend resolves BEFORE
-    the jit boundary so ``registry.set_default_backend`` takes effect on
-    the next call rather than being pinned by a stale trace.
+    The backend resolves BEFORE the jit boundary so
+    ``registry.set_default_backend`` takes effect on the next call rather
+    than being pinned by a stale trace.
     """
-    if interpret is not None:
-        backend = "interpret" if interpret else "pallas"
     return _dispatch(xq, wq, x_scale, w_scale, bm=bm, bn=bn, bk=bk,
                      backend=registry.resolve_backend(backend))
 
 
 def qmm_from_float(x: jnp.ndarray, w: jnp.ndarray, bits: int = 5,
-                   interpret: bool | None = None,
                    backend: str | None = None) -> jnp.ndarray:
     """Quantize fp inputs on the fly and run the integer kernel."""
     xq, sx = quant_lib.pack_act(x, bits)
     wq, sw = quant_lib.pack_weight(w, bits)
     return quant_matmul(xq, wq, sx.reshape(1, 1), sw.reshape(1, -1),
-                        interpret=interpret, backend=backend)
+                        backend=backend)
 
 
 def qmm_packed(x: jnp.ndarray, wq: jnp.ndarray, sw: jnp.ndarray,

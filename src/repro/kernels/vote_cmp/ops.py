@@ -57,30 +57,25 @@ def _dispatch(r1, r2, *, K, bm, bn, bk, backend):
 
 def mismatch_bits(r1: jnp.ndarray, r2: jnp.ndarray, K: int,
                   *, bm: int = 128, bn: int = 128, bk: int = 128,
-                  interpret: bool | None = None,
                   backend: str | None = None) -> jnp.ndarray:
     """All-substring comparator: (L1-K+1, L2-K+1) XOR-bit counts.
 
     Zero entries mark exact K-window matches (paper: no SL current).
     Backend resolves before the jit boundary (see quant_matmul.ops)."""
-    if interpret is not None:
-        backend = "interpret" if interpret else "pallas"
     return _dispatch(r1, r2, K=K, bm=bm, bn=bn, bk=bk,
                      backend=registry.resolve_backend(backend))
 
 
 def find_matches(r1: jnp.ndarray, r2: jnp.ndarray, K: int,
-                 interpret: bool | None = None,
                  backend: str | None = None) -> jnp.ndarray:
     """Boolean (n1, n2): exact K-length window matches between two reads."""
-    return mismatch_bits(r1, r2, K, interpret=interpret,
-                         backend=backend) == 0
+    return mismatch_bits(r1, r2, K, backend=backend) == 0
 
 
 def best_match(r1: jnp.ndarray, r2: jnp.ndarray, K: int,
-               interpret: bool | None = None, backend: str | None = None):
+               backend: str | None = None):
     """(i, j, found): positions of the first exact K-window match."""
-    m = mismatch_bits(r1, r2, K, interpret=interpret, backend=backend)
+    m = mismatch_bits(r1, r2, K, backend=backend)
     flat = jnp.argmin(m.reshape(-1))
     found = m.reshape(-1)[flat] == 0
     n2 = m.shape[1]

@@ -1,22 +1,24 @@
-"""Serving launcher: continuous-batching engine on a smoke config.
+"""Serving launcher: the ``repro.serve.Server`` lifecycle on a smoke config.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
-        [--slots 4] [--requests 6] [--max-tokens 8]
+        [--slots 4] [--requests 6] [--max-tokens 8] [--stream]
 
 The production serve_step (one decode step against a seq_len KV cache on
 the 16x16 / 2x16x16 meshes) is lowered+validated by repro.launch.dryrun;
-this driver exercises the same decode path end to end with the engine's
-admission/retirement logic on local devices.
+this driver exercises the same decode path end to end through the unified
+serving API: requests are submitted as ``LMRequest``s, the ``Server``
+owns admission/backpressure/retirement, and the run ends with a
+``metrics()`` snapshot (requests/s, occupancy, p50/p99).
 """
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro import configs as cfg_reg
 from repro.models import lm as lm_lib
-from repro.serve.engine import Request, ServingEngine
+from repro.serve import LMRequest, Server
+from repro.serve.engine import ServingEngine
 
 
 def main():
@@ -26,6 +28,8 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-tokens", type=int, default=8)
+    ap.add_argument("--stream", action="store_true",
+                    help="stream the first request token by token")
     args = ap.parse_args()
 
     cfg = cfg_reg.get_smoke(args.arch)
@@ -34,21 +38,34 @@ def main():
                          "token model (e.g. qwen2.5-3b)")
     params = lm_lib.init_lm(jax.random.PRNGKey(0), cfg)
     eng = ServingEngine(params, cfg, batch_slots=args.slots, max_len=128)
+    srv = Server(eng, max_queue=max(args.requests, 1), backpressure="block")
 
     rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        plen = int(rng.integers(2, 8))
-        eng.submit(Request(rid=rid,
-                           prompt=rng.integers(0, cfg.vocab_size, plen),
-                           max_tokens=args.max_tokens))
-    t0 = time.perf_counter()
-    done = eng.run()
-    dt = time.perf_counter() - t0
-    total = sum(len(r.out_tokens) for r in done.values())
-    print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
-          f"({eng.steps} engine steps, {args.slots} slots)")
-    for rid in sorted(done):
-        print(f"  req {rid}: {done[rid].out_tokens}")
+    reqs = [LMRequest(prompt=rng.integers(0, cfg.vocab_size,
+                                          int(rng.integers(2, 8))),
+                      max_tokens=args.max_tokens)
+            for _ in range(args.requests)]
+
+    if args.stream and reqs:
+        print("streaming request 0:")
+        for ev in srv.stream(reqs[0]):
+            if ev.kind == "token":
+                print(f"  token[{ev.index}] = {ev.payload}")
+        reqs = reqs[1:]
+
+    futs = [srv.submit(r) for r in reqs]
+    for f in futs:
+        f.result()
+    # report over EVERYTHING this server completed, streamed included
+    done = sorted(srv.results.values(), key=lambda r: r.rid)
+    m = srv.metrics()
+    total = sum(len(r.value) for r in done if r.ok)
+    print(f"served {m.completed} requests / {total} tokens in "
+          f"{m.elapsed_s:.2f}s ({m.steps} engine steps, {args.slots} slots, "
+          f"occupancy {m.occupancy:.2f}, {m.requests_per_s:.2f} req/s, "
+          f"p50 {m.latency_p50_s:.3f}s p99 {m.latency_p99_s:.3f}s)")
+    for res in done:
+        print(f"  req {res.rid}: {res.value}")
 
 
 if __name__ == "__main__":

@@ -95,6 +95,30 @@ class BasecallResult:
                    window_reads=np.zeros((0, max_read_len), np.int32),
                    window_lengths=np.zeros((0,), np.int32))
 
+    @classmethod
+    def from_window_reads(cls, reads: np.ndarray, lengths: np.ndarray,
+                          *, max_read_len: int,
+                          span: Optional[int] = None) -> "BasecallResult":
+        """Vote one read's per-window decodes into its consensus.
+
+        THE single finalization of the serving path: ``BasecallPipeline.
+        basecall`` and ``serve.BasecallEngine`` both call this, which is
+        what keeps engine ≡ pipeline bit for bit (zero windows -> empty,
+        one window -> that read, else overlap-stitched consensus)."""
+        reads = np.asarray(reads)
+        lengths = np.asarray(lengths, np.int32)
+        if reads.shape[0] == 0:
+            return cls.empty(max_read_len)
+        if reads.shape[0] == 1:
+            cons, clen = reads[0], int(lengths[0])
+        else:
+            span = span or max_read_len * reads.shape[0]
+            cons, clen = chunking.stitch_reads(
+                jnp.asarray(reads), jnp.asarray(lengths), span=span)
+            cons, clen = np.asarray(cons), int(clen)
+        return cls(read=cons, length=clen, window_reads=reads,
+                   window_lengths=lengths)
+
 
 class BasecallPipeline:
     def __init__(self, mcfg: bc.BasecallerConfig, *,
@@ -305,17 +329,9 @@ class BasecallPipeline:
         if not reads:
             # empty signal => zero windows: an empty read, not a crash
             return BasecallResult.empty(self.max_read_len)
-        reads = np.concatenate(reads)
-        lens = np.concatenate(lens)
-        if reads.shape[0] == 1:
-            cons, clen = reads[0], int(lens[0])
-        else:
-            span = span or self.max_read_len * reads.shape[0]
-            cons, clen = chunking.stitch_reads(
-                jnp.asarray(reads), jnp.asarray(lens), span=span)
-            cons, clen = np.asarray(cons), int(clen)
-        return BasecallResult(read=cons, length=clen, window_reads=reads,
-                              window_lengths=lens)
+        return BasecallResult.from_window_reads(
+            np.concatenate(reads), np.concatenate(lens),
+            max_read_len=self.max_read_len, span=span)
 
     # -- fixed-window serving ----------------------------------------------
     def basecall_windows(self, signal_batch, params=None):

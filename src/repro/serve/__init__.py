@@ -1,0 +1,11 @@
+"""Serving layer: ``api.Server`` request lifecycle over the two
+``EngineProtocol`` step-executors (LM tokens / base-calling windows),
+all driving one ``scheduler.SlotScheduler``."""
+from repro.serve.api import (BasecallRequest, EngineProtocol, LMRequest,
+                             QueueFull, ServeEvent, ServeFuture, ServeResult,
+                             Server, ServerMetrics)
+from repro.serve.scheduler import SlotScheduler
+
+__all__ = ["Server", "ServeFuture", "ServeResult", "ServeEvent",
+           "ServerMetrics", "BasecallRequest", "LMRequest", "QueueFull",
+           "EngineProtocol", "SlotScheduler"]

@@ -10,11 +10,16 @@ are exhausted retires immediately — its consensus is voted from the
 accumulated window reads and the slot admits the next queued read, so
 short reads never wait for long ones (iteration-level scheduling, same
 policy as serve/engine.py).
+
+The engine is a pure step-executor implementing ``serve.api.
+EngineProtocol``; the request lifecycle (queueing, backpressure,
+deadlines, cancellation, per-window streaming, the driver loop) lives in
+``serve.api.Server``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -40,6 +45,20 @@ class ReadRequest:
         return self.result is not None
 
 
+class _WindowView:
+    """Constant-time sequence view over one request's decoded windows."""
+    __slots__ = ("_req",)
+
+    def __init__(self, req: ReadRequest):
+        self._req = req
+
+    def __len__(self) -> int:
+        return len(self._req.reads)
+
+    def __getitem__(self, i: int) -> Tuple[np.ndarray, int]:
+        return (self._req.reads[i], self._req.lengths[i])
+
+
 class BasecallEngine:
     def __init__(self, pipeline: BasecallPipeline, params=None,
                  batch_slots: int = 8):
@@ -57,6 +76,29 @@ class BasecallEngine:
                               np.float32)
         self.steps = 0
 
+    # -- EngineProtocol request adapters -----------------------------------
+    event_kind = "window"
+
+    def make_request(self, rid: int, r) -> ReadRequest:
+        return ReadRequest(rid=rid, signal=np.asarray(r.signal))
+
+    def degenerate(self, r) -> bool:
+        """A zero-length signal chunks to zero windows: nothing to decode."""
+        return np.asarray(r.signal).shape[0] == 0
+
+    def empty_result(self, r) -> BasecallResult:
+        return BasecallResult.empty(self.pipe.max_read_len)
+
+    def progress(self, native: ReadRequest) -> "_WindowView":
+        # a lazy (read, length) view — the server polls progress() every
+        # step, so materializing the zipped list each time would be
+        # O(windows²) per read
+        return _WindowView(native)
+
+    def result_of(self, native: ReadRequest) -> BasecallResult:
+        assert native.result is not None
+        return native.result
+
     # -- admission ---------------------------------------------------------
     def submit(self, req: ReadRequest):
         self.sched.submit(req)
@@ -67,7 +109,7 @@ class BasecallEngine:
             np.asarray(req.signal).shape[0])
         req.cursor = 0
 
-    def _admit(self):
+    def admit(self) -> List[int]:
         admitted = self.sched.admit(self._admit_one)
         # an empty signal chunks to zero windows: retire it immediately
         # with an empty read instead of feeding step() an empty lane
@@ -76,6 +118,7 @@ class BasecallEngine:
             if req is not None and req.windows.shape[0] == 0:
                 self._finalize(req)
                 self.sched.retire(slot, req.rid)
+        return admitted
 
     # -- stepping ----------------------------------------------------------
     def active_mask(self) -> np.ndarray:
@@ -108,22 +151,7 @@ class BasecallEngine:
         if not req.reads:                      # zero-window (empty) signal
             req.result = BasecallResult.empty(self.pipe.max_read_len)
             return
-        reads = np.stack(req.reads)
-        lens = np.asarray(req.lengths, np.int32)
-        if reads.shape[0] == 1:
-            cons, clen = reads[0], int(lens[0])
-        else:
-            span = self.pipe.max_read_len * reads.shape[0]
-            cons, clen = chunking.stitch_reads(
-                jnp.asarray(reads), jnp.asarray(lens), span=span)
-            cons, clen = np.asarray(cons), int(clen)
-        req.result = BasecallResult(read=cons, length=clen,
-                                    window_reads=reads, window_lengths=lens)
-
-    def run(self, max_steps: int = 100_000) -> Dict[int, ReadRequest]:
-        while self.sched.pending() and max_steps > 0:
-            self._admit()
-            if self.sched.any_active():
-                self.step()
-            max_steps -= 1
-        return self.sched.finished
+        # the pipeline's own finalization — engine ≡ pipeline by sharing it
+        req.result = BasecallResult.from_window_reads(
+            np.stack(req.reads), np.asarray(req.lengths, np.int32),
+            max_read_len=self.pipe.max_read_len)

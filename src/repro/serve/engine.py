@@ -17,6 +17,11 @@ retraces; padded steps carry an all-False active mask, i.e. are no-ops).
 This is iteration-level scheduling (Orca-style) on a cache whose per-slot
 positions make lanes fully independent; launch/specs.py's ``decode`` cells
 lower exactly one engine step on the production mesh.
+
+The engine is a pure step-executor implementing ``serve.api.
+EngineProtocol`` (admit / step / retire + the request adapters); the
+request lifecycle — queueing, backpressure, deadlines, cancellation,
+streaming, the driver loop — lives in ``serve.api.Server``.
 """
 from __future__ import annotations
 
@@ -112,6 +117,28 @@ class ServingEngine:
     def slot_req(self) -> List[Optional[Request]]:
         return self.sched.slots
 
+    # -- EngineProtocol request adapters -----------------------------------
+    event_kind = "token"
+
+    def make_request(self, rid: int, r) -> Request:
+        return Request(rid=rid, prompt=np.asarray(r.prompt, np.int32),
+                       max_tokens=r.max_tokens, eos_id=r.eos_id)
+
+    def degenerate(self, r) -> bool:
+        """Nothing to decode: a zero/negative token budget or an empty
+        prompt (no last token to feed the first step) — admitted lanes
+        would wedge or crash, so the server completes these inline."""
+        return r.max_tokens <= 0 or np.asarray(r.prompt).shape[0] == 0
+
+    def empty_result(self, r) -> List[int]:
+        return []
+
+    def progress(self, native: Request) -> List[int]:
+        return native.out_tokens
+
+    def result_of(self, native: Request) -> List[int]:
+        return list(native.out_tokens)
+
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request):
         self.sched.submit(req)
@@ -145,8 +172,8 @@ class ServingEngine:
                                          jnp.asarray(active))
         self.last_token[slot] = int(req.prompt[-1])
 
-    def _admit(self):
-        self.sched.admit(self._admit_one)
+    def admit(self) -> List[int]:
+        return self.sched.admit(self._admit_one)
 
     # -- decoding -----------------------------------------------------------
     def active_mask(self) -> np.ndarray:
@@ -169,11 +196,3 @@ class ServingEngine:
                     or len(req.out_tokens) >= req.max_tokens):
                 req.done = True
                 self.sched.retire(slot, req.rid)
-
-    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
-        while self.sched.pending() and max_steps > 0:
-            self._admit()
-            if self.sched.any_active():
-                self.step()
-            max_steps -= 1
-        return self.sched.finished

@@ -65,3 +65,35 @@ class SlotScheduler(Generic[R]):
         self.finished[rid] = req
         self.slots[slot] = None
         return req
+
+    def drain_finished(self) -> Dict[int, R]:
+        """Hand retired requests to the caller and forget them (the server
+        polls this every step, so ``finished`` never grows unboundedly)."""
+        done, self.finished = self.finished, {}
+        return done
+
+    # -- cancellation ------------------------------------------------------
+    def release(self, slot: int) -> R:
+        """Free ``slot`` WITHOUT retiring (cancel/expiry: the request is
+        dropped, not finished).  Both engines' lanes are masked/reassembled
+        from host state each step, so an abandoned lane needs no device
+        cleanup — the next admission resets it."""
+        req = self.slots[slot]
+        assert req is not None, f"releasing empty slot {slot}"
+        self.slots[slot] = None
+        return req
+
+    def cancel_queued(self, req: R) -> bool:
+        """Remove a not-yet-admitted request from the queue (by identity)."""
+        for i, q in enumerate(self.queue):
+            if q is req:
+                del self.queue[i]
+                return True
+        return False
+
+    def slot_of(self, req: R) -> Optional[int]:
+        """The slot ``req`` currently occupies, or None (by identity)."""
+        for slot, q in enumerate(self.slots):
+            if q is req:
+                return slot
+        return None

@@ -67,17 +67,17 @@ def test_golden_packed_bitwise_equals_repack(golden_pipeline, golden_read):
 
 
 def test_golden_consensus_matches_engine(golden_pipeline, golden_read):
-    """The continuous-batching engine must reproduce the pipeline's golden
-    consensus exactly (same windows, same logit_lengths, same decoder)."""
-    from repro.serve.basecall_engine import BasecallEngine, ReadRequest
+    """The continuous-batching engine (behind the serving API) must
+    reproduce the pipeline's golden consensus exactly (same windows, same
+    logit_lengths, same decoder)."""
+    from repro.serve import BasecallRequest, Server
+    from repro.serve.basecall_engine import BasecallEngine
 
     pipe, params, _ = golden_pipeline
     seq, sig = golden_read
     want = pipe.basecall(sig, params)
-    eng = BasecallEngine(pipe, params=params, batch_slots=2)
-    eng.submit(ReadRequest(rid=0, signal=sig))
-    done = eng.run()
-    got = done[0].result
+    srv = Server(BasecallEngine(pipe, params=params, batch_slots=2))
+    got = srv.submit(BasecallRequest(signal=sig)).result().value
     assert got.length == want.length
     np.testing.assert_array_equal(got.read[: got.length],
                                   want.read[: want.length])

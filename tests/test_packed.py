@@ -28,8 +28,9 @@ from repro.kernels.registry import Backend
 from repro.models import basecaller as bc
 from repro.models import lm as lm_lib
 from repro.pipeline import BasecallPipeline
-from repro.serve.basecall_engine import BasecallEngine, ReadRequest
-from repro.serve.engine import Request, ServingEngine
+from repro.serve import BasecallRequest, LMRequest, Server
+from repro.serve.basecall_engine import BasecallEngine
+from repro.serve.engine import ServingEngine
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -111,14 +112,15 @@ def test_engine_holds_packed_artifact_and_matches_pipeline():
     eng = BasecallEngine(pipe, batch_slots=2)
     assert bc.is_packed(eng.params)          # the artifact, not float weights
     sigs = [_signal(n, seed=20 + i) for i, n in enumerate((130, 470))]
-    for i, s in enumerate(sigs):
-        eng.submit(ReadRequest(rid=i, signal=s))
-    done = eng.run()
+    srv = Server(eng)
+    for s in sigs:
+        srv.submit(BasecallRequest(signal=s))
+    done = srv.run_until_idle()
     for i, s in enumerate(sigs):
         want = pipe.basecall(s)
-        np.testing.assert_array_equal(done[i].result.read[: want.length],
+        np.testing.assert_array_equal(done[i].value.read[: want.length],
                                       want.read[: want.length])
-        assert done[i].result.length == want.length
+        assert done[i].value.length == want.length
 
 
 def test_qmm_packed_matches_reference():
@@ -358,10 +360,11 @@ def test_serving_engine_packed_matches_unpacked():
                             pack=pack)
         if pack:
             assert eng.cfg.quant.weights_prequantized
-        for i, p in enumerate(prompts):
-            eng.submit(Request(rid=i, prompt=p, max_tokens=6))
-        done = eng.run()
-        outs.append({i: done[i].out_tokens for i in done})
+        srv = Server(eng)
+        for p in prompts:
+            srv.submit(LMRequest(prompt=p, max_tokens=6))
+        done = srv.run_until_idle()
+        outs.append({i: done[i].value for i in done})
     assert outs[0] == outs[1]
 
 

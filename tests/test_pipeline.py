@@ -16,6 +16,7 @@ from repro.kernels.registry import Backend
 from repro.models import basecaller as bc
 from repro.pipeline import (BasecallPipeline, ChunkConfig, TrainPolicy,
                             chunk_signal)
+from repro.serve import BasecallRequest, Server
 from repro.serve.basecall_engine import BasecallEngine, ReadRequest
 
 jax.config.update("jax_platform_name", "cpu")
@@ -125,14 +126,22 @@ def test_basecall_short_and_empty_signals():
 
 
 def test_engine_handles_empty_signal():
+    """Engine-level regression: an empty signal submitted STRAIGHT to the
+    scheduler (below the server's admission validation) still retires at
+    admit() with an empty result instead of wedging a lane."""
     pipe = _pipe()
     eng = BasecallEngine(pipe, batch_slots=2)
-    eng.submit(ReadRequest(rid=0, signal=np.zeros((0,), np.float32)))
-    eng.submit(ReadRequest(rid=1, signal=_long_signal(130, seed=5)))
-    done = eng.run()
+    eng.sched.submit(ReadRequest(rid=0, signal=np.zeros((0,), np.float32)))
+    eng.admit()
+    done = eng.sched.drain_finished()
     assert done[0].result.length == 0
+    assert not any(eng.active_mask())
+    # and the pool still serves a real read through the API afterwards
+    srv = Server(eng)
+    res = srv.submit(BasecallRequest(
+        signal=_long_signal(130, seed=5))).result()
     want = pipe.basecall(_long_signal(130, seed=5))
-    assert done[1].result.length == want.length
+    assert res.value.length == want.length
 
 
 # ---------------------------------------------------------------------------
@@ -235,14 +244,14 @@ def test_engine_matches_pipeline_per_read():
     pipe = _pipe()
     sigs = [_long_signal(n, seed=10 + i)
             for i, n in enumerate((130, 470, 120))]
-    eng = BasecallEngine(pipe, batch_slots=2)
-    for i, s in enumerate(sigs):
-        eng.submit(ReadRequest(rid=i, signal=s))
-    done = eng.run()
+    srv = Server(BasecallEngine(pipe, batch_slots=2))
+    for s in sigs:
+        srv.submit(BasecallRequest(signal=s))
+    done = srv.run_until_idle()
     assert sorted(done) == [0, 1, 2]
     for i, s in enumerate(sigs):
         want = pipe.basecall(s)
-        got = done[i].result
+        got = done[i].value
         assert got.length == want.length, f"read {i}"
         np.testing.assert_array_equal(got.read[: got.length],
                                       want.read[: want.length])
@@ -251,11 +260,12 @@ def test_engine_matches_pipeline_per_read():
 def test_engine_retires_short_reads_early():
     pipe = _pipe()
     eng = BasecallEngine(pipe, batch_slots=1)
-    eng.submit(ReadRequest(rid=0, signal=_long_signal(120)))      # 1 window
-    eng.submit(ReadRequest(rid=1, signal=_long_signal(60 * 7)))   # many
-    done = eng.run()
-    n0 = done[0].windows.shape[0]
-    n1 = done[1].windows.shape[0]
+    srv = Server(eng)
+    srv.submit(BasecallRequest(signal=_long_signal(120)))      # 1 window
+    srv.submit(BasecallRequest(signal=_long_signal(60 * 7)))   # many
+    done = srv.run_until_idle()
+    n0 = done[0].value.window_reads.shape[0]
+    n1 = done[1].value.window_reads.shape[0]
     assert n0 == 1 and n1 > 1
     assert eng.steps == n0 + n1   # one slot: pure sequential window count
 
@@ -267,11 +277,10 @@ def test_engine_handles_multichannel_signals():
     pipe = BasecallPipeline(mcfg, backend="ref", beam_width=2)
     pipe.init_params(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    eng = BasecallEngine(pipe, batch_slots=2)   # 2 slots, 1 request: one idle
+    srv = Server(BasecallEngine(pipe, batch_slots=2))  # 1 request: one idle
     sig = rng.standard_normal((200, 2)).astype(np.float32)
-    eng.submit(ReadRequest(rid=0, signal=sig))
-    done = eng.run()
-    assert done[0].result is not None and done[0].result.length >= 0
+    res = srv.submit(BasecallRequest(signal=sig)).result()
+    assert res.ok and res.value.length >= 0
 
 
 def test_lstm_backend_warns_partial_acceleration_once_per_process():

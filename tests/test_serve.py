@@ -1,13 +1,29 @@
-"""Serving engine: continuous batching == sequential reference decode."""
+"""Serving layer: the ``repro.serve.Server`` request lifecycle.
+
+Three layers of proof:
+  * engine oracle parity — continuous batching through the Server equals
+    sequential full-forward decoding (the LM engine's ground truth);
+  * lifecycle properties — random admit/cancel/retire interleavings never
+    leak or double-occupy a slot; backpressure policies, deadlines,
+    priorities and degenerate requests behave as specified (driven on a
+    jax-free toy engine so hundreds of interleavings run in milliseconds);
+  * golden parity — ``Server.submit``/``stream`` over ``BasecallEngine``
+    is bitwise identical to ``BasecallPipeline.basecall``.
+"""
 import dataclasses
+import random
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs as cfg_reg
 from repro.models import decode as decode_lib
 from repro.models import lm as lm_lib
+from repro.serve import (BasecallRequest, LMRequest, QueueFull, Server,
+                         SlotScheduler)
 from repro.serve.engine import Request, ServingEngine
 
 jax.config.update("jax_platform_name", "cpu")
@@ -32,41 +48,59 @@ def _reference_generate(params, cfg, prompt, n_tokens):
     return out
 
 
-def test_engine_matches_reference_single():
+# ---------------------------------------------------------------------------
+# engine oracle parity, now through the Server front-end
+# ---------------------------------------------------------------------------
+
+def test_server_matches_reference_single():
     cfg, params = _setup()
     prompt = [5, 9, 2, 7]
     want = _reference_generate(params, cfg, prompt, 6)
-    eng = ServingEngine(params, cfg, batch_slots=2, max_len=64)
-    eng.submit(Request(rid=0, prompt=np.asarray(prompt), max_tokens=6))
-    done = eng.run()
-    assert done[0].out_tokens == want
+    srv = Server(ServingEngine(params, cfg, batch_slots=2, max_len=64))
+    res = srv.submit(LMRequest(prompt=np.asarray(prompt),
+                               max_tokens=6)).result()
+    assert res.ok and res.value == want
 
 
-def test_engine_continuous_batching_multiple_requests():
+def test_server_continuous_batching_multiple_requests():
     """3 requests through 2 slots: each result equals its solo reference."""
     cfg, params = _setup(1)
     prompts = [[1, 2, 3], [9, 8, 7, 6, 5], [4, 4]]
     budgets = [5, 4, 6]
-    eng = ServingEngine(params, cfg, batch_slots=2, max_len=64)
-    for i, (p, m) in enumerate(zip(prompts, budgets)):
-        eng.submit(Request(rid=i, prompt=np.asarray(p), max_tokens=m))
-    done = eng.run()
+    srv = Server(ServingEngine(params, cfg, batch_slots=2, max_len=64))
+    futs = [srv.submit(LMRequest(prompt=np.asarray(p), max_tokens=m))
+            for p, m in zip(prompts, budgets)]
+    done = srv.run_until_idle()
     assert sorted(done) == [0, 1, 2]
     for i, (p, m) in enumerate(zip(prompts, budgets)):
         want = _reference_generate(params, cfg, p, m)
-        assert done[i].out_tokens == want, f"request {i}"
+        assert done[i].value == want, f"request {i}"
+    assert all(f.done() for f in futs)
 
 
-def test_engine_eos_retires_slot():
+def test_server_eos_retires_slot():
     cfg, params = _setup(2)
     want = _reference_generate(params, cfg, [3, 1], 8)
     # eos == the first generated token: retire immediately after one step
     eng = ServingEngine(params, cfg, batch_slots=1, max_len=64)
-    eng.submit(Request(rid=7, prompt=np.asarray([3, 1]), max_tokens=8,
-                       eos_id=want[0]))
-    done = eng.run()
-    assert done[7].out_tokens == want[:1]
+    srv = Server(eng)
+    res = srv.submit(LMRequest(prompt=np.asarray([3, 1]), max_tokens=8,
+                               eos_id=want[0])).result()
+    assert res.value == want[:1]
     assert not any(eng.active_mask())
+
+
+def test_server_streams_tokens_incrementally():
+    cfg, params = _setup(6)
+    prompt = [2, 5, 1]
+    want = _reference_generate(params, cfg, prompt, 4)
+    srv = Server(ServingEngine(params, cfg, batch_slots=2, max_len=64))
+    events = list(srv.stream(LMRequest(prompt=np.asarray(prompt),
+                                       max_tokens=4)))
+    toks = [e for e in events if e.kind == "token"]
+    assert [e.payload for e in toks] == want
+    assert [e.index for e in toks] == list(range(4))
+    assert events[-1].kind == "final" and events[-1].payload.value == want
 
 
 def test_decode_active_mask_freezes_lane():
@@ -111,7 +145,401 @@ def test_folded_admission_generation_end_to_end():
     cfg, params = _setup(5)
     prompt = [3, 8, 6]                      # body of 2 -> bucket of 2
     want = _reference_generate(params, cfg, prompt, 5)
-    eng = ServingEngine(params, cfg, batch_slots=2, max_len=64)
-    eng.submit(Request(rid=0, prompt=np.asarray(prompt), max_tokens=5))
-    done = eng.run()
-    assert done[0].out_tokens == want
+    srv = Server(ServingEngine(params, cfg, batch_slots=2, max_len=64))
+    res = srv.submit(LMRequest(prompt=np.asarray(prompt),
+                               max_tokens=5)).result()
+    assert res.value == want
+
+
+# ---------------------------------------------------------------------------
+# lifecycle properties on a jax-free toy engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ToyRequest:
+    work: int                          # engine steps to completion
+    priority: int = 0
+    deadline: Optional[float] = None
+
+
+class _Native:
+    def __init__(self, rid, work):
+        self.rid = rid
+        self.work = work
+        self.out: List[int] = []
+
+
+class ToyEngine:
+    """Minimal EngineProtocol implementation: one unit of output per step,
+    retire after ``work`` units.  No jax — lifecycle tests run in ms."""
+    event_kind = "unit"
+
+    def __init__(self, batch_slots: int):
+        self.sched: SlotScheduler[_Native] = SlotScheduler(batch_slots)
+        self.steps = 0
+
+    def make_request(self, rid, r: ToyRequest) -> _Native:
+        return _Native(rid, r.work)
+
+    def degenerate(self, r: ToyRequest) -> bool:
+        return r.work <= 0
+
+    def empty_result(self, r: ToyRequest) -> List[int]:
+        return []
+
+    def admit(self):
+        return self.sched.admit(lambda slot, req: None)
+
+    def step(self):
+        self.steps += 1
+        for slot, req in enumerate(self.sched.slots):
+            if req is None:
+                continue
+            req.out.append(len(req.out))
+            if len(req.out) >= req.work:
+                self.sched.retire(slot, req.rid)
+
+    def progress(self, native: _Native) -> List[int]:
+        return native.out
+
+    def result_of(self, native: _Native) -> List[int]:
+        return list(native.out)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        self.t += dt
+
+
+def test_scheduler_random_interleavings_never_leak_or_double_occupy():
+    """Property: under random submit/admit/retire/release/cancel
+    interleavings the slot table never double-occupies, and every request
+    is in exactly one place (queued, active, finished, or dropped)."""
+    for seed in range(25):
+        rng = random.Random(seed)
+        sched: SlotScheduler[_Native] = SlotScheduler(rng.randint(1, 4))
+        next_rid, dropped, all_reqs = 0, set(), {}
+        for _ in range(rng.randint(5, 60)):
+            op = rng.choice(["submit", "admit", "retire", "release",
+                             "cancel"])
+            if op == "submit":
+                req = _Native(next_rid, 1)
+                all_reqs[next_rid] = req
+                sched.submit(req)
+                next_rid += 1
+            elif op == "admit":
+                sched.admit(lambda slot, req: None)
+            elif op == "retire":
+                occupied = [s for s, r in enumerate(sched.slots)
+                            if r is not None]
+                if occupied:
+                    slot = rng.choice(occupied)
+                    sched.retire(slot, sched.slots[slot].rid)
+            elif op == "release":
+                occupied = [s for s, r in enumerate(sched.slots)
+                            if r is not None]
+                if occupied:
+                    slot = rng.choice(occupied)
+                    dropped.add(sched.release(slot).rid)
+            elif op == "cancel" and sched.queue:
+                req = rng.choice(sched.queue)
+                assert sched.cancel_queued(req)
+                dropped.add(req.rid)
+
+            # invariants: no identity appears twice; full conservation
+            active = [r.rid for r in sched.slots if r is not None]
+            queued = [r.rid for r in sched.queue]
+            finished = list(sched.finished)
+            assert len(active) == len(set(active)), seed
+            everywhere = active + queued + finished + sorted(dropped)
+            assert sorted(everywhere) == sorted(all_reqs), seed
+        # drain: everything still live must complete, nothing leaks
+        while sched.pending():
+            sched.admit(lambda slot, req: None)
+            for slot, r in enumerate(list(sched.slots)):
+                if r is not None:
+                    sched.retire(slot, r.rid)
+        assert set(sched.finished) | dropped == set(all_reqs)
+
+
+def test_server_random_lifecycle_terminates_every_request():
+    """Property: random submit/cancel/step interleavings — every submitted
+    request reaches exactly one terminal state and no slot stays occupied."""
+    for seed in range(15):
+        rng = random.Random(100 + seed)
+        eng = ToyEngine(batch_slots=rng.randint(1, 3))
+        srv = Server(eng, max_queue=4, backpressure="shed-oldest")
+        futs = []
+        for _ in range(rng.randint(5, 40)):
+            op = rng.choice(["submit", "submit", "step", "cancel"])
+            if op == "submit":
+                futs.append(srv.submit(ToyRequest(work=rng.randint(0, 4))))
+            elif op == "step":
+                srv.step()
+            elif op == "cancel" and futs:
+                futs[rng.randrange(len(futs))].cancel()
+        done = srv.run_until_idle()
+        assert sorted(done) == sorted(f.rid for f in futs), seed
+        statuses = {r.status for r in done.values()}
+        assert statuses <= {"ok", "cancelled", "shed"}, seed
+        assert not any(eng.sched.active_mask()), seed
+        assert not eng.sched.queue and not eng.sched.finished, seed
+        for f in futs:     # ok results carry exactly `work` units
+            res = done[f.rid]
+            if res.ok:
+                assert res.value == list(range(len(res.value)))
+
+
+def test_backpressure_reject_raises_queue_full():
+    eng = ToyEngine(batch_slots=1)
+    srv = Server(eng, max_queue=2, backpressure="reject")
+    srv.submit(ToyRequest(work=3))
+    srv.step()                                    # request 0 -> the slot
+    srv.submit(ToyRequest(work=1))
+    srv.submit(ToyRequest(work=1))                # queue now full (2)
+    with pytest.raises(QueueFull):
+        srv.submit(ToyRequest(work=1))
+    assert srv.metrics().rejected == 1
+    done = srv.run_until_idle()
+    assert sorted(r.rid for r in done.values() if r.ok) == [0, 1, 2]
+
+
+def test_backpressure_block_drives_engine_until_space():
+    eng = ToyEngine(batch_slots=1)
+    srv = Server(eng, max_queue=1, backpressure="block")
+    f0 = srv.submit(ToyRequest(work=2))
+    f1 = srv.submit(ToyRequest(work=2))           # fills the 1-deep queue
+    f2 = srv.submit(ToyRequest(work=2))           # must block-step to admit
+    assert eng.steps > 0                          # progress was forced
+    done = srv.run_until_idle()
+    assert all(done[f.rid].ok for f in (f0, f1, f2))
+
+
+def test_backpressure_shed_oldest_drops_longest_queued():
+    clock = FakeClock()
+    eng = ToyEngine(batch_slots=1)
+    srv = Server(eng, max_queue=2, backpressure="shed-oldest", clock=clock)
+    srv.submit(ToyRequest(work=5))
+    srv.step()                                    # rid 0 occupies the slot
+    clock.advance(1.0)
+    f1 = srv.submit(ToyRequest(work=1))           # oldest queued
+    clock.advance(1.0)
+    f2 = srv.submit(ToyRequest(work=1))
+    clock.advance(1.0)
+    f3 = srv.submit(ToyRequest(work=1))           # sheds f1
+    assert f1.done() and f1.result().status == "shed"
+    done = srv.run_until_idle()
+    assert done[f2.rid].ok and done[f3.rid].ok
+    assert srv.metrics().shed == 1
+
+
+def test_deadline_expires_queued_request():
+    clock = FakeClock()
+    eng = ToyEngine(batch_slots=1)
+    srv = Server(eng, clock=clock)
+    f0 = srv.submit(ToyRequest(work=4))
+    f1 = srv.submit(ToyRequest(work=1, deadline=2.0))   # will wait too long
+    f2 = srv.submit(ToyRequest(work=1, deadline=50.0))  # comfortable
+    srv.step()                                    # rid 0 admitted
+    clock.advance(3.0)                            # f1's deadline passes
+    done = srv.run_until_idle()
+    assert done[f0.rid].ok
+    assert done[f1.rid].status == "expired" and done[f1.rid].value is None
+    assert done[f2.rid].ok
+    assert srv.metrics().expired == 1
+
+
+def test_deadline_expires_in_flight_request_and_frees_slot():
+    clock = FakeClock()
+    eng = ToyEngine(batch_slots=1)
+    srv = Server(eng, clock=clock)
+    f0 = srv.submit(ToyRequest(work=100, deadline=1.5))
+    f1 = srv.submit(ToyRequest(work=2))
+    srv.step()                                    # f0 admitted, starts
+    clock.advance(2.0)                            # mid-flight expiry
+    done = srv.run_until_idle()
+    assert done[f0.rid].status == "expired"
+    assert done[f1.rid].ok                        # slot was freed for f1
+    assert not any(eng.sched.active_mask())
+
+
+def test_priority_admits_before_fifo():
+    eng = ToyEngine(batch_slots=1)
+    srv = Server(eng)
+    srv.submit(ToyRequest(work=2))                # occupies the slot
+    srv.step()
+    f_lo = srv.submit(ToyRequest(work=1, priority=0))
+    f_hi = srv.submit(ToyRequest(work=1, priority=5))
+    done = srv.run_until_idle()
+    assert done[f_hi.rid].finished_at <= done[f_lo.rid].finished_at
+
+
+def test_cancel_queued_and_active():
+    eng = ToyEngine(batch_slots=1)
+    srv = Server(eng)
+    f0 = srv.submit(ToyRequest(work=50))
+    f1 = srv.submit(ToyRequest(work=1))
+    srv.step()                                    # f0 active, f1 queued
+    assert f1.cancel()                            # queued cancel
+    assert f0.cancel()                            # in-flight cancel
+    assert not f0.cancel()                        # already terminal
+    done = srv.run_until_idle()
+    assert done[f0.rid].status == "cancelled"
+    assert done[f1.rid].status == "cancelled"
+    assert not any(eng.sched.active_mask())
+
+
+def test_degenerate_toy_request_completes_inline():
+    eng = ToyEngine(batch_slots=1)
+    srv = Server(eng, max_queue=1)
+    res = srv.submit(ToyRequest(work=0)).result()
+    assert res.ok and res.value == [] and eng.steps == 0
+
+
+def test_terminal_records_evicted_beyond_retention():
+    """A long-lived server keeps only the last ``retain_results`` terminal
+    records: old futures age out, memory stays bounded."""
+    eng = ToyEngine(batch_slots=2)
+    srv = Server(eng, retain_results=3)
+    futs = [srv.submit(ToyRequest(work=1)) for _ in range(8)]
+    srv.run_until_idle()
+    assert len(srv.results) == 3 and len(srv._records) == 3
+    assert sorted(srv.results) == [f.rid for f in futs[-3:]]
+    assert futs[-1].result().ok                  # recent: still readable
+    with pytest.raises(KeyError, match="aged out"):
+        futs[0].result()                         # evicted: explicit error
+    m = srv.metrics()
+    assert m.completed == 8                      # counters are not evicted
+
+
+def test_server_ignores_requests_submitted_straight_to_engine():
+    """Mixed mode: natives submitted directly to the engine (even with
+    colliding rids) are never delivered to the server's futures, and the
+    server's own requests still resolve with their own results."""
+    eng = ToyEngine(batch_slots=1)
+    # a foreign native whose rid will collide with the server's first rid
+    eng.sched.submit(_Native(rid=0, work=2))
+    srv = Server(eng)
+    fut = srv.submit(ToyRequest(work=3))         # server also assigns rid 0
+    while not fut.done():
+        srv.step()
+    res = fut.result()
+    assert res.ok and res.value == [0, 1, 2]     # OUR 3 units, not the 2
+    # the foreign native completed on the engine but was not delivered
+    assert srv.metrics().completed == 1
+    assert not eng.sched.pending()
+
+
+# ---------------------------------------------------------------------------
+# degenerate requests on the REAL engines (admission validation)
+# ---------------------------------------------------------------------------
+
+def test_lm_degenerate_requests_do_not_wedge_slots():
+    """max_tokens <= 0 and empty prompts complete with empty results, and
+    the pool still serves real work afterwards."""
+    cfg, params = _setup(7)
+    srv = Server(ServingEngine(params, cfg, batch_slots=1, max_len=64))
+    r0 = srv.submit(LMRequest(prompt=np.asarray([3, 1]),
+                              max_tokens=0)).result()
+    r1 = srv.submit(LMRequest(prompt=np.asarray([], np.int32),
+                              max_tokens=4)).result()
+    r2 = srv.submit(LMRequest(prompt=np.asarray([3, 1]),
+                              max_tokens=-2)).result()
+    assert (r0.ok and r0.value == [] and r1.ok and r1.value == []
+            and r2.ok and r2.value == [])
+    want = _reference_generate(params, cfg, [3, 1], 3)
+    res = srv.submit(LMRequest(prompt=np.asarray([3, 1]),
+                               max_tokens=3)).result()
+    assert res.value == want                     # the slot was never wedged
+
+
+def test_basecall_degenerate_request_completes_empty():
+    from repro.core.quant import QuantConfig
+    from repro.pipeline import BasecallPipeline
+    from repro.serve.basecall_engine import BasecallEngine
+
+    pipe = BasecallPipeline.from_preset(
+        "guppy", scale="tiny",
+        quant=QuantConfig(enabled=True, bits_w=5, bits_a=5),
+        backend="ref", beam_width=3)
+    pipe.init_params(jax.random.PRNGKey(0))
+    srv = Server(BasecallEngine(pipe, batch_slots=1))
+    res = srv.submit(BasecallRequest(
+        signal=np.zeros((0,), np.float32))).result()
+    assert res.ok and res.value.length == 0 and res.value.sequence() == ""
+    sig = np.random.default_rng(0).standard_normal(130).astype(np.float32)
+    res2 = srv.submit(BasecallRequest(signal=sig)).result()
+    want = pipe.basecall(sig)
+    assert res2.value.length == want.length      # still serving after it
+
+
+# ---------------------------------------------------------------------------
+# golden parity: Server over BasecallEngine ≡ BasecallPipeline.basecall
+# ---------------------------------------------------------------------------
+
+def test_server_submit_bitwise_matches_pipeline_golden(golden_pipeline,
+                                                       golden_read):
+    from repro.serve.basecall_engine import BasecallEngine
+
+    pipe, params, _ = golden_pipeline
+    _, sig = golden_read
+    want = pipe.basecall(sig, params)
+    srv = Server(BasecallEngine(pipe, params=params, batch_slots=2))
+    got = srv.submit(BasecallRequest(signal=sig)).result().value
+    np.testing.assert_array_equal(got.window_reads, want.window_reads)
+    np.testing.assert_array_equal(got.window_lengths, want.window_lengths)
+    assert got.length == want.length
+    np.testing.assert_array_equal(got.read, want.read)
+
+
+def test_server_stream_bitwise_matches_pipeline_golden(golden_pipeline,
+                                                       golden_read):
+    """Incremental per-window events carry exactly the pipeline's window
+    reads, in window order, ending with the identical consensus."""
+    from repro.serve.basecall_engine import BasecallEngine
+
+    pipe, params, _ = golden_pipeline
+    _, sig = golden_read
+    want = pipe.basecall(sig, params)
+    srv = Server(BasecallEngine(pipe, params=params, batch_slots=2))
+    events = list(srv.stream(BasecallRequest(signal=sig)))
+    windows = [e for e in events if e.kind == "window"]
+    assert len(windows) == want.window_reads.shape[0]
+    for ev in windows:
+        read, length = ev.payload
+        np.testing.assert_array_equal(np.asarray(read),
+                                      want.window_reads[ev.index])
+        assert int(length) == int(want.window_lengths[ev.index])
+    final = events[-1]
+    assert final.kind == "final"
+    np.testing.assert_array_equal(final.payload.value.read, want.read)
+    assert final.payload.value.length == want.length
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_snapshot_counts_and_tails():
+    clock = FakeClock()
+    eng = ToyEngine(batch_slots=2)
+    srv = Server(eng, clock=clock)
+    futs = [srv.submit(ToyRequest(work=w)) for w in (1, 2, 3)]
+    while srv.pending():
+        srv.step()
+        clock.advance(0.1)
+    m = srv.metrics()
+    assert m.submitted == 3 and m.completed == 3
+    assert m.queue_depth == 0 and m.active == 0
+    assert m.steps == eng.steps > 0
+    assert 0.0 < m.occupancy <= 1.0
+    assert m.requests_per_s > 0
+    assert 0.0 < m.latency_p50_s <= m.latency_p99_s
+    assert all(srv.results[f.rid].n_events == len([
+        e for e in f.events() if e.kind == "unit"]) for f in futs)
