@@ -7,6 +7,12 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 ``--backend`` rebinds the process-wide default in
 ``repro.kernels.registry`` so every suite's kernel calls route through the
 chosen implementation (auto / ref / interpret / pallas).
+
+``--only shard_scaling`` sweeps the dp-sharded basecall path over the
+process's devices (set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+before launch to fake N host devices on CPU; see
+``benchmarks/fig_shard_scaling.py`` for a standalone entry that sets it
+for you).
 """
 import argparse
 import sys
@@ -37,7 +43,7 @@ def main() -> None:
 
     from . import (fig7_quant_throughput, fig9_breakdown, fig21_seat,
                    fig24_pim, fig25_adc, fig26_beamwidth, fig_serve_load,
-                   roofline, table3_models)
+                   fig_shard_scaling, roofline, table3_models)
     suites = [
         ("table3", table3_models.run),
         ("fig7", fig7_quant_throughput.run),
@@ -49,6 +55,7 @@ def main() -> None:
         ("fig26", fig26_beamwidth.run),
         ("roofline", roofline.run),
         ("serve_load", lambda: fig_serve_load.run(smoke=args.quick)),
+        ("shard_scaling", lambda: fig_shard_scaling.run(smoke=args.quick)),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -48,7 +48,31 @@ def get_mesh() -> Optional[jax.sharding.Mesh]:
 
 @contextlib.contextmanager
 def use_mesh(mesh: jax.sharding.Mesh):
-    """Install ``mesh`` as the ambient mesh for ``constrain``/``get_mesh``."""
+    """Install ``mesh`` as the ambient mesh for ``constrain``/``get_mesh``.
+
+    Everything downstream — model ``constrain`` calls, the pipeline's
+    dp-sharded basecall path, engine slot scaling — keys off the ambient
+    mesh, so a single ``with`` block turns the whole serving path
+    multi-device without any API change at the call sites.
+
+    Args:
+        mesh: a ``jax.sharding.Mesh`` whose axis names the logical
+            ``"dp"``/``"tp"`` vocabulary maps onto (``"pod"``/``"data"``
+            are data-parallel, ``"model"`` is tensor-parallel) — or
+            ``None`` to pin "no mesh", masking any outer ``use_mesh``
+            (how the pipeline keeps a generator's device placement
+            consistent with the mesh captured at its creation).
+
+    Returns:
+        A context manager yielding ``mesh``; on exit the previous ambient
+        mesh (or none) is restored.  Nestable — the innermost mesh wins.
+
+    Example::
+
+        mesh = jax.make_mesh((4,), ("data",))
+        with use_mesh(mesh):
+            result = pipe.basecall(signal)   # windows shard over "dp"
+    """
     _stack().append(mesh)
     try:
         yield mesh
@@ -76,8 +100,51 @@ def logical_spec(logical: Sequence, mesh) -> Tuple:
     return tuple(_physical(a, mesh) for a in logical)
 
 
-def constrain(x, logical: Sequence):
-    """with_sharding_constraint under the ambient mesh; no-op without one."""
+def dp_size(mesh: Optional[jax.sharding.Mesh] = None) -> int:
+    """Device count behind the logical ``"dp"`` axis.
+
+    Args:
+        mesh: the mesh to inspect; defaults to the ambient :func:`use_mesh`
+            mesh.
+
+    Returns:
+        The product of the mesh's data-parallel axis sizes, or ``1`` when
+        no mesh is active (single-device paths stay untouched).
+    """
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None:
+        return 1
+    ax = _physical("dp", mesh)
+    return 1 if ax is None else _axis_size(mesh, ax)
+
+
+def constrain(x, logical: Sequence, *, strict: bool = False):
+    """``with_sharding_constraint`` under the ambient mesh.
+
+    The single sharding annotation the models/pipeline speak: callers name
+    logical axes ("dp"/"tp"), this maps them onto whatever physical mesh is
+    ambient and degrades gracefully everywhere else.
+
+    Args:
+        x: the array to annotate.
+        logical: one logical axis name (or ``None``) per dim of ``x``,
+            e.g. ``("dp", None, None)`` to shard dim 0 over data-parallel
+            devices.
+        strict: when True, a sharded dim that does not divide its mesh-axis
+            group raises a clear ``ValueError`` instead of silently
+            skipping the constraint (the pipeline uses this so an
+            indivisible window batch fails with a readable message, not an
+            XLA shape crash deep inside GSPMD).
+
+    Returns:
+        ``x`` annotated with the resolved ``NamedSharding`` — or ``x``
+        unchanged when no mesh is active, no logical axis resolves on this
+        mesh, or (non-strict) a dim is indivisible.
+
+    Example::
+
+        windows = constrain(windows, ("dp", None, None))
+    """
     mesh = get_mesh()
     if mesh is None:
         return x
@@ -92,8 +159,38 @@ def constrain(x, logical: Sequence):
             continue
         n = _axis_size(mesh, ax)
         if dim % n != 0:
+            if strict:
+                raise ValueError(
+                    f"cannot shard dim of size {dim} over mesh axis "
+                    f"{ax!r} ({n} devices): {dim} % {n} != 0. Pad the "
+                    f"batch to a multiple of {n} or drop the mesh "
+                    f"(shape={tuple(x.shape)}, logical={tuple(logical)})")
             return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def replicate(x):
+    """All-gather ``x`` to fully-replicated under the ambient mesh.
+
+    The pipeline applies this to per-window reads/lengths before the host
+    stitch/vote, so every device (and the host) sees the complete window
+    set.  No-op without an ambient mesh.
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+
+
+def batch_sharding(mesh, ndim: int) -> NamedSharding:
+    """``NamedSharding`` splitting dim 0 over logical "dp", rest replicated.
+
+    What the pipeline/engines ``jax.device_put`` window batches with before
+    a sharded decode step (dim 0 must divide :func:`dp_size` — the callers
+    pad to a multiple first, or raise via strict :func:`constrain`).
+    """
+    spec = (_physical("dp", mesh),) + (None,) * (ndim - 1)
+    return NamedSharding(mesh, P(*spec))
 
 
 def _axis_size(mesh, axis) -> int:
@@ -122,6 +219,11 @@ def path_str(path) -> str:
             parts.append(str(k))
     return "/".join(parts)
 
+
+#: sentinel logical "tuple" for rules that replicate a leaf on every dim
+#: regardless of rank (the basecall serving artifact uses this — dp shards
+#: windows, never weights)
+REPLICATE = "replicate"
 
 # (regex, logical tuple) pairs; first match wins.  The logical tuple is
 # right-aligned against the param's trailing dims (scanned layer dims keep
@@ -157,6 +259,8 @@ def param_logical(path: str, ndim: int, scanned: bool,
     eff = ndim - (1 if scanned else 0)       # dims the rules describe
     for pat, logical in tuple(overrides) + _DEFAULT_RULES:
         if re.search(pat, path):
+            if logical == REPLICATE:
+                return (None,) * ndim
             if len(logical) != eff:
                 continue
             return (None,) * (ndim - eff) + tuple(logical)
@@ -184,3 +288,14 @@ def param_sharding_tree(shapes, mesh, overrides=()):
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree_util.tree_map_with_path(f, shapes)
+
+
+def replicated_sharding_tree(tree, mesh):
+    """Sharding tree that fully replicates every leaf of ``tree`` on ``mesh``.
+
+    :func:`param_sharding_tree` under a match-everything :data:`REPLICATE`
+    rule — how the dp-sharded basecall path places its ``PackedParams``
+    serving artifact (every device holds the whole model; only the window
+    batch is split).
+    """
+    return param_sharding_tree(tree, mesh, overrides=((r"", REPLICATE),))

@@ -1,0 +1,32 @@
+"""Fake-multi-device host bootstrap (jax-free on purpose).
+
+XLA locks the host device count at first backend initialization, so the
+``--xla_force_host_platform_device_count`` flag must land in ``XLA_FLAGS``
+BEFORE anything imports jax.  This module therefore imports nothing that
+does: tests' conftest, doc-snippet subprocess launchers, and standalone
+benchmarks all call :func:`force_host_devices` as their very first step.
+"""
+from __future__ import annotations
+
+import os
+from typing import MutableMapping
+
+FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(n: int,
+                       env: MutableMapping[str, str] = os.environ,
+                       override: bool = False) -> None:
+    """Prepend ``{FLAG}={n}`` to ``env["XLA_FLAGS"]``.
+
+    By default an already-present flag wins (a user/caller-set count is
+    respected); ``override=True`` replaces it — what the doc-snippet
+    subprocess launcher uses so a stray flag inherited from the parent
+    environment cannot change the device count its snippets rely on.
+    No-op once jax has initialized its backend — call it first."""
+    flags = env.get("XLA_FLAGS", "")
+    if FLAG in flags:
+        if not override:
+            return
+        flags = " ".join(t for t in flags.split() if not t.startswith(FLAG))
+    env["XLA_FLAGS"] = (f"{FLAG}={n} " + flags).strip()

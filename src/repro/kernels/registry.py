@@ -69,7 +69,26 @@ if _default_backend not in BACKENDS:
 
 
 def register_op(name: str, *, ref: Callable, pallas: Callable) -> None:
-    """Register (or re-register) an op's reference + Pallas implementations."""
+    """Register (or re-register) an op's reference + Pallas implementations.
+
+    Called at import time by each kernel package's ``ops.py`` (see
+    ``docs/kernels.md`` for the add-an-op walkthrough).
+
+    Args:
+        name: the registry key callers resolve with :func:`get_op`.
+        ref: pure-jnp oracle — identical public signature, runs anywhere,
+            and is the numerics ground truth in tests.
+        pallas: the Pallas kernel wrapper; must accept an
+            ``interpret: bool`` keyword (the registry supplies it for the
+            "interpret" backend).
+
+    Returns:
+        None.
+
+    Example::
+
+        register_op("my_op", ref=my_op_ref, pallas=my_op_pallas)
+    """
     _REGISTRY[name] = OpEntry(name=name, ref=ref, pallas=pallas)
 
 
@@ -118,7 +137,26 @@ def _ensure(name: str) -> OpEntry:
 
 
 def get_op(name: str, backend: Optional[str] = None) -> Callable:
-    """Resolve an op to a concrete callable for ``backend``."""
+    """Resolve an op to a concrete callable for ``backend``.
+
+    Args:
+        name: a registered op name (``list_ops()`` enumerates them; the
+            owning kernel module is imported lazily on first use).
+        backend: "auto" | "pallas" | "interpret" | "ref", or None for the
+            process default (``set_default_backend`` /
+            ``REPRO_DEFAULT_BACKEND``).
+
+    Returns:
+        The op's concrete callable: the jnp oracle for "ref", otherwise
+        the Pallas wrapper with ``interpret`` pre-bound.
+
+    Raises:
+        KeyError: unknown op name (with a did-you-mean hint).
+
+    Example::
+
+        qmm = get_op("quant_matmul", backend="interpret")
+    """
     entry = _ensure(name)
     b = resolve_backend(backend)
     if b == "ref":
@@ -142,6 +180,7 @@ class Backend:
                 f"unknown backend {self.mode!r}; one of {BACKENDS}")
 
     def op(self, name: str) -> Callable:
+        """Resolve op ``name`` through the registry on this backend."""
         return get_op(name, self.mode)
 
     @property

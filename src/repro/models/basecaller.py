@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.core import quant as quant_lib
 from repro.core.quant import (QuantConfig, fake_quant, fq_act, fq_weight,
                               qdense)
+from repro.dist.sharding import constrain
 from repro.kernels.registry import Backend
 
 N_BASES = 4
@@ -370,10 +371,20 @@ def apply_basecaller(params, signal, cfg: BasecallerConfig,
                 "(training uses float params + the fake-quant STE path)")
         cfg = cfg.with_quant(cfg.quant.as_prequantized())
         params = params.as_tree()
-    x = signal
+    # SERVING path only (backend is not None): windows stay split over the
+    # logical "dp" axis through every stage when a dist.sharding mesh is
+    # ambient.  The training path must stay constraint-free — constrain
+    # bakes the ambient mesh into the jaxpr at trace time, and the
+    # trainer's jits (unlike the pipeline's serving jits) are not keyed
+    # per mesh, so a baked mesh would silently outlive its use_mesh block.
+    def _dp(t):
+        return constrain(t, ("dp", None, None)) if backend is not None else t
+
+    x = _dp(signal)
     for p, spec in zip(params["conv"], cfg.conv):
         x = jax.nn.relu(_conv1d(x, p["w"], p["b"], spec.stride, cfg.quant,
                                 per_example=backend is not None))
+        x = _dp(x)
 
     for i, layer in enumerate(params["rnn"]):
         if cfg.rnn_direction == "bidi":
@@ -383,13 +394,14 @@ def apply_basecaller(params, signal, cfg: BasecallerConfig,
         else:
             reverse = (cfg.rnn_direction == "alt") and (i % 2 == 1)
             x = _run_rnn(x, layer, cfg, reverse=reverse, backend=backend)
+        x = _dp(x)
 
     if backend is None:
         logits = qdense(x, params["fc"]["w"], cfg.quant, params["fc"]["b"])
     else:
         logits = _qdense_backend(x, params["fc"], cfg.quant, backend,
                                  params["fc"]["b"])
-    return jax.nn.log_softmax(logits, axis=-1)
+    return _dp(jax.nn.log_softmax(logits, axis=-1))
 
 
 def apply_basecaller_packed(packed: PackedParams, signal,

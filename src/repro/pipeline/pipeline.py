@@ -46,6 +46,7 @@ from repro.core import ctc as ctc_lib
 from repro.core import seat as seat_lib
 from repro.core.quant import QuantConfig
 from repro.data import genome
+from repro.dist import sharding as shd
 from repro.kernels.registry import Backend
 from repro.models import basecaller as bc
 from repro.pipeline import chunking
@@ -53,6 +54,17 @@ from repro.pipeline.training import PhasedTrainer, TrainPolicy
 
 _SCALES = {"full": lambda n: bc.PRESETS[n], "demo": bc.demo_preset,
            "tiny": bc.tiny_preset}
+
+
+def _fifo_put(cache: dict, key, value, cap: int = 4) -> None:
+    """Insert into a small bounded cache, evicting the oldest entry.
+
+    The one eviction policy behind the pipeline's pack/placement/per-mesh
+    caches — values hold strong refs to whatever pins their id()-based
+    keys, so a bounded FIFO is all the invalidation these need."""
+    if len(cache) >= cap:
+        cache.pop(next(iter(cache)))
+    cache[key] = value
 
 # the LSTM "no fused kernel" notice is a property of the build, not of any
 # one pipeline — emit it once per process, not once per construction
@@ -85,6 +97,7 @@ class BasecallResult:
     window_lengths: np.ndarray  # (n_windows,)
 
     def sequence(self, alphabet: str = "ACGT") -> str:
+        """The consensus read as a base string (e.g. ``"ACGT..."``)."""
         return "".join(alphabet[b] for b in self.read[: self.length])
 
     @classmethod
@@ -121,6 +134,42 @@ class BasecallResult:
 
 
 class BasecallPipeline:
+    """The one facade over chunk → quantized model → CTC decode → vote.
+
+    Construct via :meth:`from_preset` (paper presets) or directly from a
+    ``models.basecaller.BasecallerConfig``; then ``init_params`` (or bind a
+    checkpoint via ``params=``) and call one of the three serving surfaces
+    — :meth:`basecall`, :meth:`basecall_iter`, :meth:`basecall_windows` —
+    or train through :meth:`trainer`.
+
+    Under an ambient ``dist.sharding.use_mesh`` mesh every serving surface
+    runs dp-sharded: the window batch splits over the mesh's data-parallel
+    devices (params replicated), per-window reads are all-gathered before
+    the shared stitch/vote, and results are bitwise identical to the
+    single-device path.
+
+    Args:
+        mcfg: the base-caller architecture/quantization config.
+        backend: kernel registry backend ("auto" | "pallas" | "interpret"
+            | "ref") threaded through every projection and recurrent step.
+        scfg: SEAT view/consensus config (defaults derived from ``mcfg``).
+        chunk: long-read windowing config; ``chunk.window`` must equal
+            ``mcfg.input_len``.
+        beam_width: CTC beam width (1 = greedy).
+        max_read_len: decode pad length per window (default
+            ``mcfg.output_len``).
+        packed: serve from the quantize-once ``PackedParams`` artifact
+            (False keeps the repack-per-call oracle path).
+        params: optional float checkpoint to bind immediately.
+
+    Example::
+
+        pipe = BasecallPipeline.from_preset("guppy", scale="demo",
+                                            backend="auto")
+        pipe.init_params(jax.random.PRNGKey(0))
+        result = pipe.basecall(long_raw_signal)
+    """
+
     def __init__(self, mcfg: bc.BasecallerConfig, *,
                  backend: str | Backend = "auto",
                  scfg: Optional[seat_lib.SEATConfig] = None,
@@ -148,6 +197,9 @@ class BasecallPipeline:
         # id. Small FIFO so pipeline-default + engine/params= overrides of
         # different checkpoints coexist without repacking each other out.
         self._pack_cache: dict = {}
+        # (id(tree), id(mesh)) -> mesh-replicated copy of a serving tree;
+        # same bounded-FIFO discipline (strong refs pin both ids)
+        self._placed_cache: dict = {}
         self.params = params
         self._trainer: Optional[PhasedTrainer] = None
         if mcfg.rnn_type == "lstm" and self.backend.mode != "ref":
@@ -160,8 +212,22 @@ class BasecallPipeline:
                     **kw) -> "BasecallPipeline":
         """Pipeline for a paper preset ("guppy"/"scrappie"/"chiron").
 
-        ``scale``: "full" (Table 3 structure), "demo" (CPU-trainable), or
-        "tiny" (unit-test widths).
+        Args:
+            name: preset name — one of ``models.basecaller.PRESETS``.
+            quant: optional ``QuantConfig`` replacing the preset's.
+            backend: kernel registry backend (see class docstring).
+            scale: "full" (Table 3 structure), "demo" (CPU-trainable), or
+                "tiny" (unit-test widths).
+            **kw: forwarded to the constructor (``beam_width``, ``chunk``,
+                ``packed``, ...).
+
+        Returns:
+            A ready-to-init :class:`BasecallPipeline`.
+
+        Example::
+
+            pipe = BasecallPipeline.from_preset("guppy", scale="tiny",
+                                                backend="ref")
         """
         if name not in bc.PRESETS:
             raise KeyError(f"unknown preset {name!r}; "
@@ -186,8 +252,10 @@ class BasecallPipeline:
         # packed artifacts so serving repacks from the new generation
         self._params_value = value
         self._pack_cache.clear()
+        self._placed_cache.clear()
 
     def init_params(self, key):
+        """Initialize (and bind) a fresh float checkpoint from ``key``."""
         self.params = bc.init_basecaller(key, self.mcfg)
         return self.params
 
@@ -212,9 +280,7 @@ class BasecallPipeline:
         if hit is not None and hit[0] is p:
             return hit[1]
         artifact = bc.pack_basecaller(p, self.mcfg)
-        if len(self._pack_cache) >= 4:                   # bounded, FIFO
-            self._pack_cache.pop(next(iter(self._pack_cache)))
-        self._pack_cache[id(p)] = (p, artifact)
+        _fifo_put(self._pack_cache, id(p), (p, artifact))
         return artifact
 
     def data_config(self, *, kmer: int = 1, mean_dwell: float = 6.0,
@@ -232,7 +298,47 @@ class BasecallPipeline:
             raise ValueError("no params: pass params= or call init_params()")
         return p
 
+    def _place_params(self, params, mesh):
+        """Replicate a serving tree onto ``mesh``, cached per (tree, mesh).
+
+        dp shards *windows*, never weights: every device holds the whole
+        serving artifact (``dist.sharding.replicated_sharding_tree`` — the
+        param-rule machinery under a match-all REPLICATE override).  The
+        mesh keys by VALUE (like ``_per_mesh``'s jit cache), so a caller
+        building an equal-but-new Mesh per call does not re-transfer the
+        whole artifact each time; the tree keys by identity (strong ref in
+        the value pins the id)."""
+        key = (id(params), mesh)
+        hit = self._placed_cache.get(key)
+        if hit is not None and hit[0] is params:
+            return hit[1]
+        placed = jax.device_put(
+            params, shd.replicated_sharding_tree(params, mesh))
+        _fifo_put(self._placed_cache, key, (params, placed))
+        return placed
+
     # -- jitted stages -----------------------------------------------------
+    def _per_mesh(self, build):
+        """One jitted instance per ambient mesh (bounded cache).
+
+        ``dist.sharding.constrain`` resolves the ambient mesh at TRACE
+        time and bakes it into the jaxpr, while ``jax.jit`` caches traces
+        on abstract values only — so a single jit object traced under mesh
+        A would silently reuse A's constraints (or crash on incompatible
+        devices) under mesh B.  Each mesh therefore gets its own jit
+        instance, first-traced under its own ``use_mesh``."""
+        fns: dict = {}
+
+        def dispatch(*args):
+            key = shd.get_mesh()                 # hashable; None off-mesh
+            fn = fns.get(key)
+            if fn is None:
+                fn = build()
+                _fifo_put(fns, key, fn)
+            return fn(*args)
+
+        return dispatch
+
     @functools.cached_property
     def _decode_windows(self):
         """(params, windows (N, window, C), logit_lengths (N,)) ->
@@ -241,36 +347,53 @@ class BasecallPipeline:
         Decode runs on the hash-merge beam decoder (``ctc_beam_search_hash
         _batch``) whose per-frame merge/top-k dispatches through the kernel
         registry on this pipeline's backend; ``logit_lengths`` masks the
-        zero-padded frames of tail windows out of the decode.
+        zero-padded frames of tail windows out of the decode.  Dispatches
+        to one jitted instance per ambient mesh (see ``_per_mesh``).
         """
+        return self._per_mesh(self._build_decode_windows)
+
+    def _build_decode_windows(self):
         mcfg, backend = self.mcfg, self.backend
         W, L = self.beam_width, self.max_read_len
 
         @jax.jit
         def fn(params, windows, logit_lengths):
+            # under an ambient mesh the window batch stays split over the
+            # logical "dp" axis through model + decode; the final replicate
+            # is the all-gather that hands the host the full window set
+            # for the shared stitch/vote (no-ops without a mesh)
+            windows = shd.constrain(windows, ("dp", None, None))
+            logit_lengths = shd.constrain(logit_lengths, ("dp",))
             lps = bc.apply_basecaller(params, windows, mcfg, backend=backend)
             if W > 1:
                 reads, lens, _ = ctc_lib.ctc_beam_search_hash_batch(
                     lps, beam_width=W, max_len=L,
                     logit_lengths=logit_lengths, backend=backend)
-                return reads[:, 0], lens[:, 0]
+                return shd.replicate(reads[:, 0]), shd.replicate(lens[:, 0])
             reads, lens = jax.vmap(
                 lambda lp, ll: ctc_lib.ctc_greedy_decode(lp, logit_length=ll)
             )(lps, logit_lengths)
             reads = reads[:, :L] if reads.shape[1] >= L else jnp.pad(
                 reads, ((0, 0), (0, L - reads.shape[1])), constant_values=-1)
-            return reads, jnp.minimum(lens, L)
+            return shd.replicate(reads), shd.replicate(jnp.minimum(lens, L))
 
         return fn
 
     @functools.cached_property
     def _windows_fused(self):
-        """Fused SEAT-view serving path over (B, window+2*margin, C)."""
+        """Fused SEAT-view serving path over (B, window+2*margin, C).
+
+        One jitted instance per ambient mesh (see ``_per_mesh``)."""
+        return self._per_mesh(self._build_windows_fused)
+
+    def _build_windows_fused(self):
         mcfg, scfg, backend = self.mcfg, self.scfg, self.backend
         W = self.beam_width
 
         @jax.jit
         def fn(params, signal):
+            signal = shd.constrain(
+                signal, ("dp",) + (None,) * (signal.ndim - 1))
             views, center = seat_lib.make_views(signal, scfg)
             lps = jnp.stack([
                 bc.apply_basecaller(params, v, mcfg, backend=backend)
@@ -279,7 +402,8 @@ class BasecallPipeline:
             reads, lens, scores = ctc_lib.ctc_beam_search_hash_batch(
                 lps[center], beam_width=W, max_len=scfg.max_read_len,
                 backend=backend)
-            return C, C_len, reads[:, 0], lens[:, 0], scores[:, 0]
+            return tuple(shd.replicate(t) for t in
+                         (C, C_len, reads[:, 0], lens[:, 0], scores[:, 0]))
 
         return fn
 
@@ -296,12 +420,47 @@ class BasecallPipeline:
         Device memory is bounded by ``chunk.batch_windows`` windows
         regardless of read length; the final partial batch is padded to
         the batch shape (one compiled program) and trimmed on host.
+
+        Under an ambient ``dist.sharding.use_mesh`` mesh each batch is
+        device-put split over the logical "dp" axis (the batch is rounded
+        up to a multiple of the dp device count with inert zero-padding
+        first — padded lanes carry ``logit_length == 0``, decode nothing,
+        and are trimmed on host), params are replicated, and the decoded
+        reads are all-gathered — so the yielded arrays are bitwise
+        identical to the single-device path.
+
+        Args:
+            signal: (T,) or (T, C) raw current samples, any length.
+            params: optional checkpoint override (defaults to the bound
+                pipeline params; packed lazily via :meth:`serving_params`).
+
+        Returns:
+            An iterator of ``(reads (n, L) int32, lengths (n,) int32)``
+            per window-batch, in window order.
+
+        Example::
+
+            for reads, lens in pipe.basecall_iter(sig):
+                ...
         """
+        # resolve params and the ambient mesh EAGERLY — a generator body
+        # would not run until first next(), by which time the caller's
+        # use_mesh block may have exited (the pin-at-creation contract)
         params = self.serving_params(params)
+        mesh = shd.get_mesh()
+        dp = shd.dp_size(mesh)
+        if mesh is not None:
+            params = self._place_params(params, mesh)
+        return self._basecall_iter(signal, params, mesh, dp)
+
+    def _basecall_iter(self, signal, params, mesh, dp
+                       ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
         windows = chunking.chunk_signal(signal, self.chunk)
         frame_lens = self.window_logit_lengths(np.asarray(signal).shape[0])
         N = windows.shape[0]
         B = self.chunk.batch_windows
+        if B % dp:
+            B += dp - B % dp          # every device batch divides "dp"
         for s in range(0, N, B):
             grp = windows[s: s + B]
             fl = frame_lens[s: s + B]
@@ -310,8 +469,17 @@ class BasecallPipeline:
                 grp = np.concatenate(
                     [grp, np.zeros((B - n,) + grp.shape[1:], grp.dtype)])
                 fl = np.concatenate([fl, np.zeros((B - n,), fl.dtype)])
-            reads, lens = self._decode_windows(params, jnp.asarray(grp),
-                                               jnp.asarray(fl))
+            grp, fl = jnp.asarray(grp), jnp.asarray(fl)
+            if mesh is not None:
+                grp = jax.device_put(grp, shd.batch_sharding(mesh, grp.ndim))
+                fl = jax.device_put(fl, shd.batch_sharding(mesh, fl.ndim))
+            # re-pin the mesh captured at generator creation: a consumer
+            # advancing this generator under a *different* ambient mesh
+            # (or none) must not mix this batch's placement with a decode
+            # trace built for that other mesh (use_mesh(None) masks outer
+            # meshes the same way)
+            with shd.use_mesh(mesh):
+                reads, lens = self._decode_windows(params, grp, fl)
             yield np.asarray(reads[:n]), np.asarray(lens[:n])
 
     def basecall(self, signal, params=None,
@@ -320,7 +488,25 @@ class BasecallPipeline:
 
         Chunks into overlapping windows, batches them through the
         quantized model + CTC beam decode, and votes the per-window reads
-        into a consensus aligned by their longest matches.
+        into a consensus aligned by their longest matches.  Runs
+        dp-sharded (bitwise identically) under an ambient
+        ``dist.sharding.use_mesh`` mesh — see :meth:`basecall_iter`.
+
+        Args:
+            signal: (T,) or (T, C) raw current samples; an empty signal
+                returns an empty result, never a crash.
+            params: optional checkpoint override.
+            span: consensus grid length for the stitch/vote (defaults to
+                ``max_read_len * n_windows``).
+
+        Returns:
+            A :class:`BasecallResult` — voted consensus read plus the
+            per-window reads that elected it.
+
+        Example::
+
+            result = pipe.basecall(long_raw_signal)
+            print(result.sequence())
         """
         reads, lens = [], []
         for r, l in self.basecall_iter(signal, params):
@@ -337,12 +523,42 @@ class BasecallPipeline:
     def basecall_windows(self, signal_batch, params=None):
         """(B, window+2*margin, C) signal windows -> fused serving outputs.
 
-        Returns (consensus (B, L), consensus_len (B,), top_read (B, L'),
-        top_len (B,), top_score (B,)) — the SEAT 3-view vote next to the
-        center view's best beam, all in one jitted call.
+        The SEAT 3-view vote next to the center view's best beam, all in
+        one jitted call.  Under an ambient ``dist.sharding.use_mesh`` mesh
+        the window batch is split over the logical "dp" axis; unlike
+        :meth:`basecall` this surface serves a *caller-fixed* batch, so a
+        batch that does not divide the dp device count raises a clear
+        ``ValueError`` instead of being padded (padding here would change
+        the shapes the caller handed us).
+
+        Args:
+            signal_batch: (B, window + 2*margin, C) fixed signal windows
+                (the serving engine's slot batch shape).
+            params: optional checkpoint override.
+
+        Returns:
+            ``(consensus (B, L), consensus_len (B,), top_read (B, L'),
+            top_len (B,), top_score (B,))``.
+
+        Example::
+
+            C, C_len, top, top_len, score = pipe.basecall_windows(batch)
         """
-        return self._windows_fused(self.serving_params(params),
-                                   jnp.asarray(signal_batch))
+        params = self.serving_params(params)
+        batch = jnp.asarray(signal_batch)
+        mesh = shd.get_mesh()
+        if mesh is not None:
+            dp = shd.dp_size(mesh)
+            if batch.shape[0] % dp:
+                raise ValueError(
+                    f"basecall_windows: batch of {batch.shape[0]} windows "
+                    f"does not divide the mesh's dp={dp} devices; pad the "
+                    f"batch to a multiple of {dp} (basecall/basecall_iter "
+                    f"pad automatically)")
+            params = self._place_params(params, mesh)
+            batch = jax.device_put(batch, shd.batch_sharding(mesh,
+                                                             batch.ndim))
+        return self._windows_fused(params, batch)
 
     # -- training ----------------------------------------------------------
     def trainer(self, policy: Optional[TrainPolicy] = None,

@@ -132,14 +132,22 @@ class ServerMetrics:
     requests_per_s: float
     latency_p50_s: float
     latency_p99_s: float
+    #: dp device count behind the engine (1 without a mesh) and the
+    #: time-averaged occupancy of each device's lane group — the scale-out
+    #: utilization axis: one cold device shows up here, not diluted into
+    #: the pool-wide mean
+    devices: int = 1
+    occupancy_per_device: tuple = (0.0,)
 
     def rows(self, prefix: str = "serve") -> List[tuple]:
         """``benchmarks._util.emit``-shaped CSV rows."""
+        per_dev = " ".join(f"{o:.3f}" for o in self.occupancy_per_device)
         return [
             (f"{prefix}/requests_per_s", f"{self.requests_per_s:.2f}",
              f"{self.completed} completed in {self.elapsed_s:.2f}s"),
             (f"{prefix}/occupancy", f"{self.occupancy:.3f}",
-             f"{self.steps} engine steps"),
+             f"{self.steps} engine steps; per-device [{per_dev}] "
+             f"over {self.devices} dp device(s)"),
             (f"{prefix}/queue_depth", str(self.queue_depth),
              f"shed={self.shed} rejected={self.rejected} "
              f"expired={self.expired}"),
@@ -206,12 +214,16 @@ class ServeFuture:
         self.rid = rid
 
     def done(self) -> bool:
+        """True once this request reached a terminal state."""
         rec = self._server._records.get(self.rid)
         # a missing record means the request reached a terminal state and
         # its record aged out of retain_results — done, result unreadable
         return rec is None or rec.result is not None
 
     def result(self, max_steps: int = 1_000_000) -> ServeResult:
+        """Drive the server loop until this request is terminal, then
+        return its ``ServeResult`` (raises ``TimeoutError`` past the
+        ``max_steps`` budget)."""
         rec = self._server._record(self.rid)
         while rec.result is None and max_steps > 0:
             self._server.step()
@@ -222,6 +234,7 @@ class ServeFuture:
         return rec.result
 
     def cancel(self) -> bool:
+        """Cancel this request (queued or in-flight); False once terminal."""
         return self._server.cancel(self.rid)
 
     def events(self) -> List[ServeEvent]:
@@ -277,6 +290,9 @@ class Server:
         self._next_rid = 0
         self._latencies: List[float] = []
         self._occ_sum = 0.0
+        # per-dp-device occupancy accumulator (lazily sized from the
+        # engine's dp attribute; engines without one count as 1 device)
+        self._occ_dev_sum: Optional[np.ndarray] = None
         self._counts = {STATUS_OK: 0, STATUS_CANCELLED: 0,
                         STATUS_EXPIRED: 0, STATUS_SHED: 0, "rejected": 0,
                         "submitted": 0}
@@ -289,7 +305,26 @@ class Server:
 
         Degenerate requests (``engine.degenerate``) resolve here with an
         empty ok result — they never occupy a queue entry or a slot.
-        A full queue applies the backpressure policy (see module doc)."""
+        A full queue applies the backpressure policy (see module doc).
+
+        Args:
+            request: a :class:`BasecallRequest` / :class:`LMRequest` (or
+                anything the engine's ``make_request`` understands), with
+                optional ``priority`` and ``deadline`` attributes.
+
+        Returns:
+            A :class:`ServeFuture`; ``future.result()`` cooperatively
+            drives the loop until this request is terminal.
+
+        Raises:
+            QueueFull: queue at capacity under the ``reject`` policy (or
+                ``shed-oldest`` with nothing of ours to shed).
+
+        Example::
+
+            fut = srv.submit(BasecallRequest(signal=sig, priority=1))
+            res = fut.result()          # ServeResult; res.value stitched
+        """
         now = self.clock()
         if self._started_at is None:
             self._started_at = now
@@ -355,9 +390,22 @@ class Server:
 
     def stream(self, request: Any,
                max_steps: int = 1_000_000) -> Iterator[ServeEvent]:
-        """Submit and yield incremental events (per decoded token /
-        per decoded signal window), ending with a "final" event whose
-        payload is the ``ServeResult``."""
+        """Submit and yield incremental events as the request decodes.
+
+        Args:
+            request: as for :meth:`submit`.
+            max_steps: server-step budget before ``TimeoutError``.
+
+        Returns:
+            An iterator of :class:`ServeEvent` — one per decoded token /
+            signal window, ending with a ``"final"`` event whose payload
+            is the :class:`ServeResult`.
+
+        Example::
+
+            for ev in srv.stream(BasecallRequest(signal=sig)):
+                print(ev.kind, ev.index)
+        """
         fut = self.submit(request)
         rec = self._record(fut.rid)
         seen = 0
@@ -391,6 +439,7 @@ class Server:
     # -- the loop -----------------------------------------------------------
 
     def pending(self) -> bool:
+        """True while any submitted request is not yet terminal."""
         return bool(self._live)
 
     def step(self) -> None:
@@ -403,6 +452,10 @@ class Server:
             # not idle server ticks — it answers "how full were the lanes
             # we actually paid for", the paper's utilization axis
             self._occ_sum += sched.occupancy()
+            dp = getattr(self.engine, "dp", 1)
+            if self._occ_dev_sum is None or len(self._occ_dev_sum) != dp:
+                self._occ_dev_sum = np.zeros((dp,))
+            self._occ_dev_sum += sched.group_occupancy(dp)
             self.engine.step()
         self._pump_events()
         for rid, native in sched.drain_finished().items():
@@ -494,17 +547,38 @@ class Server:
         self.results.clear()
         self._latencies.clear()
         self._occ_sum = 0.0
+        self._occ_dev_sum = None
         self.engine.steps = 0
         for k in self._counts:
             self._counts[k] = 0
         self._started_at = None
 
     def metrics(self) -> ServerMetrics:
+        """Snapshot the serving observability state.
+
+        Returns:
+            A :class:`ServerMetrics` with requests/s, time-averaged slot
+            occupancy (pool-wide and per dp device), queue depth,
+            shed/rejected/expired counters, and p50/p99 latency.  Under a
+            sharded engine ``devices`` is the mesh's dp size and
+            ``occupancy_per_device`` has one entry per device's lane
+            group.
+
+        Example::
+
+            m = srv.metrics()
+            print(m.requests_per_s, m.occupancy_per_device)
+        """
         steps = self.engine.steps
         now = self.clock()
         elapsed = (now - self._started_at
                    if self._started_at is not None else 0.0)
         lat = np.asarray(self._latencies) if self._latencies else None
+        dp = getattr(self.engine, "dp", 1)
+        if self._occ_dev_sum is not None and steps:
+            occ_dev = tuple(float(o) for o in self._occ_dev_sum / steps)
+        else:
+            occ_dev = (0.0,) * dp
         return ServerMetrics(
             steps=steps,
             submitted=self._counts["submitted"],
@@ -523,6 +597,8 @@ class Server:
             else 0.0,
             latency_p99_s=float(np.percentile(lat, 99)) if lat is not None
             else 0.0,
+            devices=dp,
+            occupancy_per_device=occ_dev,
         )
 
 

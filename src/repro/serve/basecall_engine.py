@@ -21,9 +21,11 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import sharding as shd
 from repro.pipeline import chunking
 from repro.pipeline.pipeline import BasecallPipeline, BasecallResult
 from repro.serve.scheduler import SlotScheduler
@@ -60,21 +62,53 @@ class _WindowView:
 
 
 class BasecallEngine:
+    """Continuous-batching step-executor for long signal reads.
+
+    Args:
+        pipeline: the :class:`BasecallPipeline` whose jitted decode stage
+            (and serving artifact) every step consumes.
+        params: optional checkpoint override (defaults to the pipeline's).
+        batch_slots: device lanes **per dp device**.  Under an ambient
+            ``dist.sharding.use_mesh`` mesh at construction the pool is
+            ``batch_slots * dp_size`` lanes and each step's window batch
+            is split over the mesh's data-parallel devices; without a
+            mesh this is the total lane count (dp = 1).
+
+    Example::
+
+        eng = BasecallEngine(pipe, batch_slots=8)
+        srv = Server(eng)
+        res = srv.submit(BasecallRequest(signal=sig)).result()
+    """
+
     def __init__(self, pipeline: BasecallPipeline, params=None,
                  batch_slots: int = 8):
         self.pipe = pipeline
         if params is None and pipeline.params is None:
             raise ValueError("BasecallEngine needs initialized params")
+        # slot capacity scales with the ambient mesh: batch_slots lanes
+        # per dp device, one (B, window, C) batch split over all of them
+        self.mesh = shd.get_mesh()
+        self.dp = shd.dp_size(self.mesh)
+        self.B = batch_slots * self.dp
         # the engine holds the quantize-once serving artifact, not float
         # weights: every step consumes the same PackedParams the pipeline
         # serves, which is what keeps engine ≡ pipeline bit for bit
         self.params = pipeline.serving_params(params)
-        self.B = batch_slots
-        self.sched: SlotScheduler[ReadRequest] = SlotScheduler(batch_slots)
+        if self.mesh is not None:
+            self.params = pipeline._place_params(self.params, self.mesh)
+        self.sched: SlotScheduler[ReadRequest] = SlotScheduler(self.B)
         ck = pipeline.chunk
         self._zero = np.zeros((ck.window, pipeline.mcfg.in_channels),
                               np.float32)
         self.steps = 0
+
+    def _mesh_ctx(self):
+        """The construction-time mesh, re-installed around device calls so
+        the jitted decode traces with its sharding constraints no matter
+        what mesh (if any) is ambient when the server drives us
+        (``use_mesh(None)`` masks an ambient mesh for a no-mesh engine)."""
+        return shd.use_mesh(self.mesh)
 
     # -- EngineProtocol request adapters -----------------------------------
     event_kind = "window"
@@ -132,9 +166,16 @@ class BasecallEngine:
         frames = np.asarray([
             r.frame_lengths[r.cursor] if r is not None else 0
             for r in self.sched.slots], np.int32)
-        reads, lens = self.pipe._decode_windows(self.params,
-                                                jnp.asarray(batch),
-                                                jnp.asarray(frames))
+        batch, frames = jnp.asarray(batch), jnp.asarray(frames)
+        if self.mesh is not None:
+            # B = batch_slots * dp by construction, so dim 0 always divides
+            batch = jax.device_put(
+                batch, shd.batch_sharding(self.mesh, batch.ndim))
+            frames = jax.device_put(
+                frames, shd.batch_sharding(self.mesh, frames.ndim))
+        with self._mesh_ctx():
+            reads, lens = self.pipe._decode_windows(self.params, batch,
+                                                    frames)
         reads, lens = np.asarray(reads), np.asarray(lens)
         self.steps += 1
         for slot, req in enumerate(self.sched.slots):

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import sharding as shd
 from repro.models import decode as decode_lib
 from repro.models import lm as lm_lib
 from repro.serve.scheduler import SlotScheduler
@@ -48,6 +49,22 @@ class Request:
 
 
 class ServingEngine:
+    """Continuous-batching step-executor for token LMs.
+
+    Args:
+        params: LM checkpoint pytree.
+        cfg: its ``lm.LMConfig`` (must embed token inputs).
+        batch_slots: device lanes **per dp device** — under an ambient
+            ``dist.sharding.use_mesh`` mesh at construction the pool is
+            ``batch_slots * dp_size`` lanes (dp = 1 without a mesh).
+            Capacity scaling only: unlike ``BasecallEngine``, the LM
+            decode batch itself still runs unsharded (dp-sharding the
+            KV cache is an open item).
+        max_len: KV-cache length per lane.
+        pack: serve the quantize-once packed artifact (False keeps the
+            float tree + per-call quantization as the oracle).
+    """
+
     def __init__(self, params, cfg: lm_lib.LMConfig, batch_slots: int = 8,
                  max_len: int = 256, pack: bool = True):
         assert cfg.embed_inputs, "engine serves token models"
@@ -60,11 +77,14 @@ class ServingEngine:
             params, cfg = lm_lib.pack_lm_serving(params, cfg)
         self.params = params
         self.cfg = cfg
-        self.B = batch_slots
+        # slot capacity scales with the ambient mesh's data-parallel size
+        # (batch_slots lanes per dp device; dp = 1 single-device)
+        self.dp = shd.dp_size()
+        self.B = batch_slots * self.dp
         self.max_len = max_len
-        self.cache = decode_lib.init_cache(cfg, batch_slots, max_len)
-        self.sched: SlotScheduler[Request] = SlotScheduler(batch_slots)
-        self.last_token = np.zeros((batch_slots,), np.int32)
+        self.cache = decode_lib.init_cache(cfg, self.B, max_len)
+        self.sched: SlotScheduler[Request] = SlotScheduler(self.B)
+        self.last_token = np.zeros((self.B,), np.int32)
         self.steps = 0
 
         def one_step(params, cache, tokens, active):
@@ -83,6 +103,8 @@ class ServingEngine:
 
         self._reset_slot = jax.jit(reset_slot, donate_argnums=(0,))
 
+        B = self.B
+
         def fold_prompt(params, cache, tokens, valid, slot):
             """Fold a padded prompt into one lane as a single scan.
 
@@ -90,11 +112,11 @@ class ServingEngine:
             entries — padded steps mask the whole batch inactive, which
             decode_step turns into a pure no-op (no write, no advance).
             """
-            lane = jnp.zeros((batch_slots,), bool).at[slot].set(True)
+            lane = jnp.zeros((B,), bool).at[slot].set(True)
 
             def body(c, tv):
                 tok, v = tv
-                toks = jnp.zeros((batch_slots,), jnp.int32).at[slot].set(tok)
+                toks = jnp.zeros((B,), jnp.int32).at[slot].set(tok)
                 _, c = decode_lib.decode_step(params, cfg, c, tokens=toks,
                                               active=lane & v)
                 return c, None

@@ -22,6 +22,13 @@ R = TypeVar("R")
 
 
 class SlotScheduler(Generic[R]):
+    """Queue + slot table + retirement for one engine's lane pool.
+
+    Args:
+        n_slots: total device lanes (under a mesh, engines size this as
+            slots-per-device x dp device count).
+    """
+
     def __init__(self, n_slots: int):
         self.n_slots = n_slots
         self.slots: List[Optional[R]] = [None] * n_slots
@@ -30,6 +37,8 @@ class SlotScheduler(Generic[R]):
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: R) -> None:
+        """Append ``req`` to the admission queue (FIFO; the server layers
+        priority ordering on top)."""
         self.queue.append(req)
 
     def admit(self, admit_fn: Callable[[int, R], None]) -> List[int]:
@@ -46,16 +55,31 @@ class SlotScheduler(Generic[R]):
 
     # -- state -------------------------------------------------------------
     def active_mask(self) -> np.ndarray:
+        """(n_slots,) bool — which lanes hold an admitted request."""
         return np.asarray([r is not None for r in self.slots])
 
     def any_active(self) -> bool:
+        """True when at least one lane is occupied."""
         return any(r is not None for r in self.slots)
 
     def pending(self) -> bool:
+        """True while anything is queued or in flight."""
         return bool(self.queue) or self.any_active()
 
     def occupancy(self) -> float:
+        """Fraction of lanes occupied right now (0.0 - 1.0)."""
         return float(self.active_mask().mean())
+
+    def group_occupancy(self, groups: int) -> np.ndarray:
+        """(groups,) mean occupancy per contiguous lane group.
+
+        Engines batch lane-major and shard dim 0 over dp devices, so lanes
+        ``[d*B/groups, (d+1)*B/groups)`` live on device ``d`` — this is the
+        per-device occupancy ``Server.metrics()`` reports under a mesh.
+        ``groups`` must divide ``n_slots`` (engines guarantee
+        ``B = slots_per_device * dp``).
+        """
+        return self.active_mask().reshape(groups, -1).mean(axis=1)
 
     # -- retirement --------------------------------------------------------
     def retire(self, slot: int, rid: int) -> R:

@@ -15,6 +15,19 @@ import random
 import sys
 import types
 
+# ---------------------------------------------------------------------------
+# multi-device host platform: the dist-pipeline tests exercise the dp-sharded
+# basecall path on 4 fake host devices.  XLA locks the device count at first
+# backend init, so the flag must land BEFORE any test imports jax — conftest
+# import time is the one place pytest guarantees runs first (repro.hostdev
+# is jax-free, so this import initializes nothing).  Single-device tests are
+# unaffected: unsharded arrays still live on device 0, and
+# sharding.constrain is a no-op without an ambient mesh.
+# ---------------------------------------------------------------------------
+from repro.hostdev import force_host_devices  # noqa: E402
+
+force_host_devices(4)
+
 
 def _install_hypothesis_fallback() -> None:
     mod = types.ModuleType("hypothesis")
@@ -95,6 +108,19 @@ import pytest
 GOLDEN_SEED = 42
 GOLDEN_GENOME_LEN = 60
 GOLDEN_TRAIN_STEPS = 300
+
+
+@pytest.fixture(scope="session")
+def host_mesh4():
+    """A 4-device data-parallel host mesh (dp = 4, no model axis).
+
+    Skips when the process has fewer than 4 devices — e.g. when something
+    imported jax before this conftest's XLA_FLAGS append could take."""
+    import jax
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 host devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    return jax.make_mesh((4,), ("data",))
 
 
 @pytest.fixture(scope="session")
