@@ -1,0 +1,21 @@
+"""repro.analysis — three-pass static analysis of the serving stack.
+
+Passes (each a submodule with a ``run() -> list[Finding]``):
+
+  trace_invariants  jaxpr-level rules over every jitted serving trace
+  kernel_checks     per-op Pallas kernel validation via the registry
+  repolint          AST lint of repo conventions (pure-ast, jax-free)
+
+Shared walker library: ``repro.analysis.jaxpr_tools`` — the ONE jaxpr
+analysis implementation in the repo (tests use it too; see
+docs/analysis.md).  CLI: ``python -m repro.analysis --strict``.
+
+This ``__init__`` stays jax-free so ``python -m repro.analysis`` can pin
+the host device count before jax initializes; import the submodules
+directly for the jax-backed machinery.
+"""
+from repro.analysis.findings import (ERROR, WARNING, Finding, drop_disabled,
+                                     errors, render)
+
+__all__ = ["ERROR", "WARNING", "Finding", "drop_disabled", "errors",
+           "render"]

@@ -1,0 +1,16 @@
+"""``python -m repro.analysis`` entry point.
+
+Pins the fake host-device count BEFORE jax initializes (the trace pass
+needs a multi-device mesh to exercise the sharding rules on CPU), then
+hands off to the argparse CLI.  ``repro.analysis/__init__`` is jax-free
+precisely so this ordering holds under ``python -m``.
+"""
+import sys
+
+from repro.hostdev import force_host_devices
+
+force_host_devices(4)
+
+from repro.analysis.cli import main  # noqa: E402  (after device pin)
+
+sys.exit(main())

@@ -1,0 +1,60 @@
+"""The one currency of ``repro.analysis``: a typed, printable finding.
+
+Every pass (trace invariants, kernel checks, repo lint) returns a flat
+``list[Finding]``; the CLI renders them and turns their presence into an
+exit code.  Keeping the type jax-free lets the package ``__init__`` and
+the CLI bootstrap import it before the host-device flags are set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Sequence
+
+ERROR = "error"
+WARNING = "warning"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation (or warning) discovered by an analysis pass.
+
+    Attributes:
+        rule: the rule identifier (e.g. ``"trace-weight-quant"``) —
+            stable, documented in ``docs/analysis.md``, and what
+            ``--disable`` / ``# repro: allow[...]`` suppressions name.
+        subject: what was analyzed — a trace case name, an op name, or a
+            ``path:line`` location for lint findings.
+        message: the actionable description of the violation.
+        severity: ``"error"`` (fails the build) or ``"warning"``
+            (fails only under ``--strict``).
+    """
+    rule: str
+    subject: str
+    message: str
+    severity: str = ERROR
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.subject}: {self.message}"
+
+
+def errors(findings: Iterable[Finding], strict: bool = False
+           ) -> List[Finding]:
+    """The findings that should fail the run (warnings count when strict)."""
+    return [f for f in findings
+            if f.severity == ERROR or (strict and f.severity == WARNING)]
+
+
+def drop_disabled(findings: Iterable[Finding],
+                  disabled: Sequence[str]) -> List[Finding]:
+    """Filter out findings whose rule the caller disabled."""
+    return [f for f in findings if f.rule not in disabled]
+
+
+def render(findings: Sequence[Finding], header: str = "") -> str:
+    """Human-readable report block (one line per finding)."""
+    lines = []
+    if header:
+        lines.append(header)
+    for f in findings:
+        lines.append(f"  {f}")
+    return "\n".join(lines)

@@ -1,0 +1,193 @@
+"""Pass 3 — AST lint: repo conventions as machine-checked rules.
+
+Pure ``ast`` + filesystem — no jax import — so the lint can run on any
+tree (the negative-path tests point it at tmp dirs with planted
+violations).  Scope is ``<root>/src/repro``; tests are exempt by
+construction (they legitimately import kernel internals to oracle them).
+
+Rule catalog (see docs/analysis.md):
+  lint-pallas-call        ``pallas_call`` invoked outside src/repro/kernels/
+  lint-kernel-import      importing an op's ``kernel``/``ref`` module
+                          outside kernels/ (bypasses ``registry.get_op``)
+  lint-interpret-kwarg    passing ``interpret=`` outside kernels/ (backend
+                          choice belongs to the registry)
+  lint-wrapper-interpret  a public op wrapper (in ``__all__`` of an op's
+                          ops.py) exposing an ``interpret`` parameter
+  lint-registry-complete  every op package ships ref.py + kernel.py +
+                          ops.py with a ``register_op`` call, and every
+                          registered op name appears in tests/ (parity
+                          coverage)
+
+Suppression: append ``# repro: allow[rule-name]`` on the flagged line.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import List, Sequence
+
+from repro.analysis.findings import Finding
+
+_KERNEL_MOD_RE = re.compile(r"^repro\.kernels\.\w+\.(kernel|ref)$")
+_REGISTER_RE = re.compile(r"register_op\(\s*['\"]([A-Za-z0-9_]+)['\"]")
+
+
+def _suppressed(lines: Sequence[str], lineno: int, rule: str) -> bool:
+    if not (1 <= lineno <= len(lines)):
+        return False
+    line = lines[lineno - 1]
+    return "repro:" in line and f"allow[{rule}]" in line
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _all_names(tree: ast.Module) -> List[str]:
+    """The string entries of a module-level ``__all__`` assignment."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "__all__":
+                    if isinstance(node.value, (ast.List, ast.Tuple)):
+                        return [e.value for e in node.value.elts
+                                if isinstance(e, ast.Constant)
+                                and isinstance(e.value, str)]
+    return []
+
+
+def _lint_tree(path: Path, rel: str, source: str,
+               in_kernels: bool) -> List[Finding]:
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [Finding("lint-parse", f"{rel}:{e.lineno or 0}",
+                        f"file does not parse: {e.msg}")]
+    lines = source.splitlines()
+    findings: List[Finding] = []
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            if not in_kernels and _call_name(node) == "pallas_call":
+                if not _suppressed(lines, node.lineno, "lint-pallas-call"):
+                    findings.append(Finding(
+                        "lint-pallas-call", f"{rel}:{node.lineno}",
+                        "pallas_call outside src/repro/kernels/; new "
+                        "kernels live in a kernels/<op>/ package and "
+                        "dispatch through registry.get_op"))
+            if not in_kernels:
+                for kw in node.keywords:
+                    if kw.arg == "interpret" and not _suppressed(
+                            lines, node.lineno, "lint-interpret-kwarg"):
+                        findings.append(Finding(
+                            "lint-interpret-kwarg", f"{rel}:{node.lineno}",
+                            "passing interpret= outside kernels/; select "
+                            "the backend via the registry ('interpret' "
+                            "backend name) instead of per-call kwargs"))
+        elif isinstance(node, (ast.Import, ast.ImportFrom)) \
+                and not in_kernels:
+            mods = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif node.module:
+                mods = [node.module]
+                # ``from repro.kernels.foo import kernel/ref``
+                if re.match(r"^repro\.kernels\.\w+$", node.module):
+                    mods += [f"{node.module}.{a.name}" for a in node.names]
+            for mod in mods:
+                if _KERNEL_MOD_RE.match(mod) and not _suppressed(
+                        lines, node.lineno, "lint-kernel-import"):
+                    findings.append(Finding(
+                        "lint-kernel-import", f"{rel}:{node.lineno}",
+                        f"import of {mod} bypasses registry.get_op; "
+                        "resolve kernel impls through the registry (ref "
+                        "oracles for tests live under tests/, which is "
+                        "exempt)"))
+    return findings
+
+
+def _lint_wrapper_interpret(path: Path, rel: str,
+                            source: str) -> List[Finding]:
+    """kernels/*/ops.py: public wrappers must not expose interpret."""
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError:
+        return []
+    public = set(_all_names(tree))
+    lines = source.splitlines()
+    findings: List[Finding] = []
+    for node in tree.body:
+        if not isinstance(node, ast.FunctionDef) or node.name not in public:
+            continue
+        a = node.args
+        names = [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+        if "interpret" in names and not _suppressed(
+                lines, node.lineno, "lint-wrapper-interpret"):
+            findings.append(Finding(
+                "lint-wrapper-interpret", f"{rel}:{node.lineno}",
+                f"public wrapper {node.name}() resurrects an interpret= "
+                "parameter; backend choice (including interpret mode) "
+                "belongs to the registry"))
+    return findings
+
+
+def _lint_registry_complete(root: Path) -> List[Finding]:
+    """Every op package ships ref+kernel+ops and has test coverage."""
+    kernels = root / "src" / "repro" / "kernels"
+    if not kernels.is_dir():
+        return []
+    findings: List[Finding] = []
+    tests_dir = root / "tests"
+    test_text = ""
+    if tests_dir.is_dir():
+        test_text = "\n".join(
+            p.read_text(encoding="utf-8", errors="replace")
+            for p in sorted(tests_dir.glob("test_*.py")))
+    for ops_py in sorted(kernels.glob("*/ops.py")):
+        pkg = ops_py.parent
+        rel = pkg.relative_to(root).as_posix()
+        for required in ("ref.py", "kernel.py"):
+            if not (pkg / required).is_file():
+                findings.append(Finding(
+                    "lint-registry-complete", rel,
+                    f"op package is missing {required}; every op ships a "
+                    "jnp oracle AND a Pallas kernel"))
+        text = ops_py.read_text(encoding="utf-8", errors="replace")
+        names = _REGISTER_RE.findall(text)
+        if not names:
+            findings.append(Finding(
+                "lint-registry-complete", rel,
+                "ops.py never calls registry.register_op; the op is "
+                "unreachable through get_op"))
+        for name in names:
+            if test_text and name not in test_text:
+                findings.append(Finding(
+                    "lint-registry-complete", rel,
+                    f"registered op {name!r} never appears in tests/; add "
+                    "it to the ref==interpret parity sweep "
+                    "(tests/test_registry.py)"))
+    return findings
+
+
+def run(root: Path = Path("."),
+        disable: Sequence[str] = ()) -> List[Finding]:
+    """Lint ``<root>/src/repro`` (plus registry completeness checks)."""
+    root = Path(root)
+    src = root / "src" / "repro"
+    kernels = src / "kernels"
+    findings: List[Finding] = []
+    for path in sorted(src.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        source = path.read_text(encoding="utf-8", errors="replace")
+        in_kernels = kernels in path.parents or path.parent == kernels
+        findings += _lint_tree(path, rel, source, in_kernels)
+        if in_kernels and path.name == "ops.py":
+            findings += _lint_wrapper_interpret(path, rel, source)
+    findings += _lint_registry_complete(root)
+    return [f for f in findings if f.rule not in disable]

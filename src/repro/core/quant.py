@@ -19,6 +19,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+#: Name of the ``jax.named_scope`` that marks a *sanctioned* dequant site:
+#: the only places an int8/int16 code may be converted to floating point
+#: inside a serving trace.  ``repro.analysis`` flags any code->float
+#: convert whose name stack lacks this scope.
+DEQUANT_SCOPE = "dequant"
+
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
@@ -130,7 +136,10 @@ def pack_act_rows(x: jnp.ndarray, bits: int
 def dequant_matmul_reference(xq, x_scale, wq, w_scale):
     """Oracle for the quantized matmul: int32 accumulate, fp dequant."""
     acc = xq.astype(jnp.int32) @ wq.astype(jnp.int32)
-    return acc.astype(jnp.float32) * x_scale * w_scale
+    # The declared dequant boundary: repro.analysis allows integer codes
+    # to become floats ONLY under this scope.
+    with jax.named_scope(DEQUANT_SCOPE):
+        return acc.astype(jnp.float32) * x_scale * w_scale
 
 
 def packed_dense_reference(x: jnp.ndarray, wq: jnp.ndarray, sw: jnp.ndarray,

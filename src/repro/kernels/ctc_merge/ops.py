@@ -48,7 +48,16 @@ def _impl_ref(eq, scores, **_tiles) -> jnp.ndarray:
     return ctc_merge_ref(eq, scores.astype(jnp.float32))
 
 
-registry.register_op("masked_logsumexp", ref=_impl_ref, pallas=_impl_pallas)
+def _example():
+    """Ragged candidate count vs bi=128 (cf. tests/test_registry.py)."""
+    B, C = 3, 45
+    eq = jnp.maximum(jnp.zeros((B, C, C), jnp.int8),
+                     jnp.eye(C, dtype=jnp.int8)[None])  # self-connected
+    return ((eq, jnp.zeros((B, C), jnp.float32)), {})
+
+
+registry.register_op("masked_logsumexp", ref=_impl_ref, pallas=_impl_pallas,
+                     example=_example)
 
 
 @functools.partial(jax.jit, static_argnames=("bi", "backend"))
@@ -111,8 +120,16 @@ def _topk_impl_ref(keys, pb, pnb, *, W: int, **_tiles):
                                pnb.astype(jnp.float32), W=W)
 
 
+def _topk_example():
+    """Ragged candidate count vs the 128 lane tile."""
+    B, C = 2, 45
+    keys = jnp.arange(B * C, dtype=jnp.int32).reshape(B, C) % 12
+    return ((keys, jnp.zeros((B, C), jnp.float32),
+             jnp.zeros((B, C), jnp.float32)), {"W": 7})
+
+
 registry.register_op("beam_merge_topk", ref=_topk_impl_ref,
-                     pallas=_topk_impl_pallas)
+                     pallas=_topk_impl_pallas, example=_topk_example)
 
 
 @functools.partial(jax.jit, static_argnames=("W", "backend"))

@@ -33,7 +33,17 @@ def _impl_ref(q, k_cache, v_cache, n_valid, *, groups: int,
                            groups=groups)
 
 
-registry.register_op("decode_attn", ref=_impl_ref, pallas=_impl_pallas)
+def _example():
+    """Ragged cache length vs bl=256 (cf. tests/test_registry.py)."""
+    B, L, Kv, G, D = 2, 75, 2, 3, 16
+    return ((jnp.zeros((B, Kv * G, D), jnp.float32),
+             jnp.zeros((B, L, Kv, D), jnp.float32),
+             jnp.zeros((B, L, Kv, D), jnp.float32),
+             jnp.asarray([31, 75], jnp.int32)), {"groups": G})
+
+
+registry.register_op("decode_attn", ref=_impl_ref, pallas=_impl_pallas,
+                     example=_example)
 
 
 @functools.partial(jax.jit, static_argnames=("groups", "bl", "backend"))

@@ -28,7 +28,17 @@ def _impl_ref(x_proj, h, u, b, **_tiles) -> jnp.ndarray:
     return gru_cell_ref(x_proj, h, u, b.reshape(1, -1))
 
 
-registry.register_op("gru_cell", ref=_impl_ref, pallas=_impl_pallas)
+def _example():
+    """Ragged batch vs bb=128 (cf. tests/test_registry.py)."""
+    B, H = 23, 48
+    return ((jnp.zeros((B, 3 * H), jnp.float32),
+             jnp.zeros((B, H), jnp.float32),
+             jnp.zeros((H, 3 * H), jnp.float32),
+             jnp.zeros((3 * H,), jnp.float32)), {})
+
+
+registry.register_op("gru_cell", ref=_impl_ref, pallas=_impl_pallas,
+                     example=_example)
 
 
 @functools.partial(jax.jit, static_argnames=("bb", "backend"))

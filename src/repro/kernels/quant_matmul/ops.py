@@ -44,7 +44,15 @@ def _impl_ref(xq, wq, x_scale, w_scale, **_tiles) -> jnp.ndarray:
                             w_scale.reshape(1, -1))
 
 
-registry.register_op("quant_matmul", ref=_impl_ref, pallas=_impl_pallas)
+def _example():
+    """Ragged-vs-MXU-tile shapes (cf. tests/test_registry.py)."""
+    return ((jnp.zeros((37, 100), jnp.int8), jnp.zeros((100, 51), jnp.int8),
+             jnp.ones((1, 1), jnp.float32), jnp.ones((1, 51), jnp.float32)),
+            {})
+
+
+registry.register_op("quant_matmul", ref=_impl_ref, pallas=_impl_pallas,
+                     example=_example)
 
 
 @functools.partial(jax.jit,

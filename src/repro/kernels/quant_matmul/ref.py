@@ -1,5 +1,8 @@
 """Pure-jnp oracle for the quantized matmul kernel."""
+import jax
 import jax.numpy as jnp
+
+from repro.core.quant import DEQUANT_SCOPE
 
 
 def quant_matmul_ref(xq, wq, x_scale, w_scale):
@@ -8,4 +11,6 @@ def quant_matmul_ref(xq, wq, x_scale, w_scale):
     xq: (M, K) int8; wq: (K, N) int8; x_scale (1,1); w_scale (1, N).
     """
     acc = jnp.dot(xq.astype(jnp.int32), wq.astype(jnp.int32))
-    return acc.astype(jnp.float32) * x_scale * w_scale
+    # declared dequant boundary (see repro.core.quant.DEQUANT_SCOPE)
+    with jax.named_scope(DEQUANT_SCOPE):
+        return acc.astype(jnp.float32) * x_scale * w_scale

@@ -56,19 +56,23 @@ class OpEntry:
     name: str
     ref: Callable
     pallas: Callable      # must accept an ``interpret: bool`` keyword
+    # zero-argument factory returning ``(args, kwargs)`` exercising the op
+    # on representative (deliberately ragged) shapes; used by
+    # ``repro.analysis.kernel_checks`` to trace the kernel statically
+    example: Optional[Callable] = None
 
 
 _REGISTRY: Dict[str, OpEntry] = {}
 
 # ``REPRO_DEFAULT_BACKEND`` seeds what "auto" means for the process (the CI
-# backend matrix sets it); ``set_default_backend`` still overrides at runtime.
-_default_backend = os.environ.get("REPRO_DEFAULT_BACKEND", "auto")
-if _default_backend not in BACKENDS:
-    raise ValueError(
-        f"REPRO_DEFAULT_BACKEND={_default_backend!r} is not one of {BACKENDS}")
+# backend matrix sets it); validated lazily at FIRST USE so a bad value
+# produces one clear ValueError from the resolving call site instead of an
+# opaque import-time failure in whatever module touched the registry first.
+_default_backend: Optional[str] = None
 
 
-def register_op(name: str, *, ref: Callable, pallas: Callable) -> None:
+def register_op(name: str, *, ref: Callable, pallas: Callable,
+                example: Optional[Callable] = None) -> None:
     """Register (or re-register) an op's reference + Pallas implementations.
 
     Called at import time by each kernel package's ``ops.py`` (see
@@ -81,15 +85,23 @@ def register_op(name: str, *, ref: Callable, pallas: Callable) -> None:
         pallas: the Pallas kernel wrapper; must accept an
             ``interpret: bool`` keyword (the registry supplies it for the
             "interpret" backend).
+        example: zero-argument factory returning ``(args, kwargs)`` on
+            representative shapes — lets ``repro.analysis`` (and other
+            tooling) trace the op without knowing its signature.
 
     Returns:
         None.
 
     Example::
 
-        register_op("my_op", ref=my_op_ref, pallas=my_op_pallas)
+        register_op("my_op", ref=my_op_ref, pallas=my_op_pallas,
+                    example=lambda: ((jnp.zeros((3, 5)),), {}))
     """
-    _REGISTRY[name] = OpEntry(name=name, ref=ref, pallas=pallas)
+    prev = _REGISTRY.get(name)
+    if example is None and prev is not None:
+        example = prev.example   # re-registration (tests) keeps the example
+    _REGISTRY[name] = OpEntry(name=name, ref=ref, pallas=pallas,
+                              example=example)
 
 
 def list_ops() -> tuple:
@@ -108,14 +120,29 @@ def set_default_backend(backend: str) -> None:
 
 
 def get_default_backend() -> str:
+    """The process default backend, seeding ``REPRO_DEFAULT_BACKEND``.
+
+    The env value is validated HERE, on first use: a typo like
+    ``REPRO_DEFAULT_BACKEND=cuda`` raises one actionable ValueError from
+    the call that first resolves a backend, not an import-time crash and
+    not a shape error deep in kernel dispatch.
+    """
+    global _default_backend
+    if _default_backend is None:
+        env = os.environ.get("REPRO_DEFAULT_BACKEND", "auto")
+        if env not in BACKENDS:
+            raise ValueError(
+                f"REPRO_DEFAULT_BACKEND={env!r} is not a known backend; "
+                f"expected one of {BACKENDS}")
+        _default_backend = env
     return _default_backend
 
 
 def resolve_backend(backend: Optional[str] = None) -> str:
     """None/"auto" -> the concrete backend for this process/host."""
-    b = backend or _default_backend
+    b = backend or get_default_backend()
     if b == "auto":
-        b = _default_backend
+        b = get_default_backend()
     if b == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "interpret"
     if b not in BACKENDS:

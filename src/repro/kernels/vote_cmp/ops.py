@@ -45,7 +45,14 @@ def _impl_ref(r1, r2, *, K: int, **_tiles) -> jnp.ndarray:
     return vote_cmp_ref(substring_bits(r1, K), substring_bits(r2, K))
 
 
-registry.register_op("mismatch_bits", ref=_impl_ref, pallas=_impl_pallas)
+def _example():
+    """Ragged read lengths vs 128 tiles (cf. tests/test_registry.py)."""
+    return ((jnp.zeros((41,), jnp.int32), jnp.zeros((29,), jnp.int32)),
+            {"K": 5})
+
+
+registry.register_op("mismatch_bits", ref=_impl_ref, pallas=_impl_pallas,
+                     example=_example)
 
 
 @functools.partial(jax.jit,

@@ -377,14 +377,21 @@ def apply_basecaller(params, signal, cfg: BasecallerConfig,
     # bakes the ambient mesh into the jaxpr at trace time, and the
     # trainer's jits (unlike the pipeline's serving jits) are not keyed
     # per mesh, so a baked mesh would silently outlive its use_mesh block.
-    def _dp(t):
-        return constrain(t, ("dp", None, None)) if backend is not None else t
+    # Each boundary is DECLARED by name (``stage:<name>`` named_scope) so
+    # repro.analysis can verify that every boundary listed by
+    # ``serving_stage_boundaries`` realizes a sharding constraint in the
+    # meshed serving trace — intent checked by name, not by magic counts.
+    def _dp(t, name):
+        if backend is None:
+            return t
+        with jax.named_scope(f"stage:{name}"):
+            return constrain(t, ("dp", None, None))
 
-    x = _dp(signal)
-    for p, spec in zip(params["conv"], cfg.conv):
+    x = _dp(signal, "signal_in")
+    for ci, (p, spec) in enumerate(zip(params["conv"], cfg.conv)):
         x = jax.nn.relu(_conv1d(x, p["w"], p["b"], spec.stride, cfg.quant,
                                 per_example=backend is not None))
-        x = _dp(x)
+        x = _dp(x, f"conv{ci}")
 
     for i, layer in enumerate(params["rnn"]):
         if cfg.rnn_direction == "bidi":
@@ -394,14 +401,29 @@ def apply_basecaller(params, signal, cfg: BasecallerConfig,
         else:
             reverse = (cfg.rnn_direction == "alt") and (i % 2 == 1)
             x = _run_rnn(x, layer, cfg, reverse=reverse, backend=backend)
-        x = _dp(x)
+        x = _dp(x, f"rnn{i}")
 
     if backend is None:
         logits = qdense(x, params["fc"]["w"], cfg.quant, params["fc"]["b"])
     else:
         logits = _qdense_backend(x, params["fc"], cfg.quant, backend,
                                  params["fc"]["b"])
-    return _dp(jax.nn.log_softmax(logits, axis=-1))
+    return _dp(jax.nn.log_softmax(logits, axis=-1), "logits")
+
+
+def serving_stage_boundaries(cfg: BasecallerConfig) -> Tuple[str, ...]:
+    """The model's declared sharding stage boundaries, in dataflow order.
+
+    This is the single source of truth ``repro.analysis`` checks against:
+    each name here must appear as a ``stage:<name>`` scope on a
+    ``sharding_constraint`` in the meshed serving trace of
+    ``apply_basecaller``.  Add a stage here AND a ``_dp(x, name)`` call in
+    the forward when introducing a new pipeline stage.
+    """
+    return (("signal_in",)
+            + tuple(f"conv{i}" for i in range(len(cfg.conv)))
+            + tuple(f"rnn{i}" for i in range(cfg.rnn_layers))
+            + ("logits",))
 
 
 def apply_basecaller_packed(packed: PackedParams, signal,

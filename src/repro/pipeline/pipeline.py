@@ -362,20 +362,29 @@ class BasecallPipeline:
             # logical "dp" axis through model + decode; the final replicate
             # is the all-gather that hands the host the full window set
             # for the shared stitch/vote (no-ops without a mesh)
-            windows = shd.constrain(windows, ("dp", None, None))
-            logit_lengths = shd.constrain(logit_lengths, ("dp",))
+            with jax.named_scope("stage:windows_in"):
+                windows = shd.constrain(windows, ("dp", None, None))
+            with jax.named_scope("stage:lengths_in"):
+                logit_lengths = shd.constrain(logit_lengths, ("dp",))
             lps = bc.apply_basecaller(params, windows, mcfg, backend=backend)
             if W > 1:
                 reads, lens, _ = ctc_lib.ctc_beam_search_hash_batch(
                     lps, beam_width=W, max_len=L,
                     logit_lengths=logit_lengths, backend=backend)
-                return shd.replicate(reads[:, 0]), shd.replicate(lens[:, 0])
-            reads, lens = jax.vmap(
-                lambda lp, ll: ctc_lib.ctc_greedy_decode(lp, logit_length=ll)
-            )(lps, logit_lengths)
-            reads = reads[:, :L] if reads.shape[1] >= L else jnp.pad(
-                reads, ((0, 0), (0, L - reads.shape[1])), constant_values=-1)
-            return shd.replicate(reads), shd.replicate(jnp.minimum(lens, L))
+                reads, lens = reads[:, 0], lens[:, 0]
+            else:
+                reads, lens = jax.vmap(
+                    lambda lp, ll: ctc_lib.ctc_greedy_decode(
+                        lp, logit_length=ll))(lps, logit_lengths)
+                reads = reads[:, :L] if reads.shape[1] >= L else jnp.pad(
+                    reads, ((0, 0), (0, L - reads.shape[1])),
+                    constant_values=-1)
+                lens = jnp.minimum(lens, L)
+            with jax.named_scope("stage:reads_out"):
+                reads = shd.replicate(reads)
+            with jax.named_scope("stage:lens_out"):
+                lens = shd.replicate(lens)
+            return reads, lens
 
         return fn
 
@@ -392,8 +401,9 @@ class BasecallPipeline:
 
         @jax.jit
         def fn(params, signal):
-            signal = shd.constrain(
-                signal, ("dp",) + (None,) * (signal.ndim - 1))
+            with jax.named_scope("stage:fused_signal_in"):
+                signal = shd.constrain(
+                    signal, ("dp",) + (None,) * (signal.ndim - 1))
             views, center = seat_lib.make_views(signal, scfg)
             lps = jnp.stack([
                 bc.apply_basecaller(params, v, mcfg, backend=backend)
@@ -402,10 +412,30 @@ class BasecallPipeline:
             reads, lens, scores = ctc_lib.ctc_beam_search_hash_batch(
                 lps[center], beam_width=W, max_len=scfg.max_read_len,
                 backend=backend)
-            return tuple(shd.replicate(t) for t in
-                         (C, C_len, reads[:, 0], lens[:, 0], scores[:, 0]))
+            with jax.named_scope("stage:fused_out"):
+                return tuple(shd.replicate(t) for t in
+                             (C, C_len, reads[:, 0], lens[:, 0],
+                              scores[:, 0]))
 
         return fn
+
+    # -- declared sharding boundaries (read by repro.analysis) -------------
+    def decode_stage_boundaries(self) -> Tuple[str, ...]:
+        """Stage boundaries of the jitted decode-windows trace, in order.
+
+        Every name must realize a ``sharding_constraint`` under an
+        ambient mesh (``stage:<name>`` scopes above + the model's own
+        ``serving_stage_boundaries``); ``repro.analysis`` enforces this.
+        """
+        return (("windows_in", "lengths_in")
+                + bc.serving_stage_boundaries(self.mcfg)
+                + ("reads_out", "lens_out"))
+
+    def fused_stage_boundaries(self) -> Tuple[str, ...]:
+        """Stage boundaries of the fused SEAT-view serving trace."""
+        return (("fused_signal_in",)
+                + bc.serving_stage_boundaries(self.mcfg)
+                + ("fused_out",))
 
     def window_logit_lengths(self, n_samples: int) -> np.ndarray:
         """(N,) decoder ``logit_lengths`` for one read's chunked windows."""

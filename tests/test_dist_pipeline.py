@@ -175,6 +175,7 @@ def test_training_path_bakes_no_mesh(tiny_pipe, host_mesh4):
     constraints even under an ambient mesh: the trainer's jits are not
     mesh-keyed, so a baked mesh would silently outlive its use_mesh
     block (regression for the serving-only constrain scoping)."""
+    from repro.analysis import jaxpr_tools as jt
     from repro.models import basecaller as bc
 
     sig = jax.numpy.zeros((4, tiny_pipe.mcfg.input_len, 1))  # 4 % dp == 0
@@ -185,7 +186,7 @@ def test_training_path_bakes_no_mesh(tiny_pipe, host_mesh4):
                 lambda p, s: bc.apply_basecaller(p, s, tiny_pipe.mcfg,
                                                  backend=backend)
             )(tiny_pipe.params, sig)
-        return str(closed.jaxpr).count("sharding_constraint")
+        return jt.count_primitive(closed, "sharding_constraint")
 
     assert count_constraints(None) == 0          # training: mesh-free
     assert count_constraints(tiny_pipe.backend) > 0   # serving: constrained

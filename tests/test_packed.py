@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import jaxpr_tools as jt
 from repro.core.quant import QuantConfig
 from repro.kernels.quant_matmul.ops import qmm_packed
 from repro.core import quant as quant_lib
@@ -142,76 +143,9 @@ def test_qmm_packed_matches_reference():
 # params leaves alone (never mixed with an activation).  Weight
 # quantization == a quantization primitive consuming a weight-only value;
 # activation packing keeps its round/clamp ops (they consume signal-mixed
-# values) and is NOT flagged.
-
-_QUANT_PRIMS = {"round", "clamp", "reduce_max"}
-
-
-def _is_quant_eqn(eqn):
-    if eqn.primitive.name in _QUANT_PRIMS:
-        return True
-    if eqn.primitive.name == "convert_element_type":
-        return eqn.params.get("new_dtype") in (jnp.int8.dtype, jnp.int16.dtype)
-    return False
-
-
-def _sub_jaxprs(eqn):
-    import jax.extend.core as jex_core
-    out = []
-    for v in eqn.params.values():
-        vals = v if isinstance(v, (list, tuple)) else [v]
-        for item in vals:
-            if isinstance(item, jax.core.ClosedJaxpr):
-                out.append(item.jaxpr)
-            elif isinstance(item, jex_core.Jaxpr if hasattr(jex_core, "Jaxpr")
-                            else jax.core.Jaxpr):
-                # raw (pallas) jaxprs: block refs don't map positionally to
-                # operands — skip; quantization never lives inside kernels
-                pass
-    return out
-
-
-def _weight_quant_eqns(jaxpr, tainted):
-    """Recursively collect quantization eqns whose inputs are all
-    weight-derived.  ``tainted`` is the set of weight-only Vars."""
-    found = []
-    for eqn in jaxpr.eqns:
-        invars = [v for v in eqn.invars if not isinstance(v, jax.core.Literal)]
-        all_w = bool(invars) and all(v in tainted for v in invars)
-        for sub in _sub_jaxprs(eqn):
-            sub_taint = set()
-            # positional alignment, suffix-aligned when lengths differ
-            # (cond carries a leading predicate operand)
-            offset = len(eqn.invars) - len(sub.invars)
-            for i, sv in enumerate(sub.invars):
-                ov = eqn.invars[i + offset] if 0 <= i + offset < len(
-                    eqn.invars) else None
-                if (ov is not None and not isinstance(ov, jax.core.Literal)
-                        and ov in tainted):
-                    sub_taint.add(sv)
-            found += _weight_quant_eqns(sub, sub_taint)
-            if len(sub.outvars) == len(eqn.outvars):
-                sub_out_taint = _outvar_taint(sub, sub_taint)
-                for ov, t in zip(eqn.outvars, sub_out_taint):
-                    if t:
-                        tainted.add(ov)
-        if all_w:
-            if _is_quant_eqn(eqn):
-                found.append(eqn)
-            for ov in eqn.outvars:
-                tainted.add(ov)
-    return found
-
-
-def _outvar_taint(jaxpr, tainted):
-    tainted = set(tainted)
-    for eqn in jaxpr.eqns:
-        invars = [v for v in eqn.invars if not isinstance(v, jax.core.Literal)]
-        if invars and all(v in tainted for v in invars):
-            for ov in eqn.outvars:
-                tainted.add(ov)
-    return [not isinstance(v, jax.core.Literal) and v in tainted
-            for v in jaxpr.outvars]
+# values) and is NOT flagged.  The walker itself lives in
+# ``repro.analysis.jaxpr_tools`` (the repo's ONE jaxpr-analysis
+# implementation — the CLI's trace pass runs the same code).
 
 
 def _count_weight_quant_ops(params, cfg, backend):
@@ -220,8 +154,7 @@ def _count_weight_quant_ops(params, cfg, backend):
     closed = jax.make_jaxpr(
         lambda p, s: bc.apply_basecaller(p, s, cfg, backend=be))(params, sig)
     n_param_leaves = len(jax.tree_util.tree_leaves(params))
-    tainted = set(closed.jaxpr.invars[:n_param_leaves])
-    return len(_weight_quant_eqns(closed.jaxpr, tainted))
+    return len(jt.weight_quant_eqns(closed, n_param_leaves))
 
 
 @pytest.mark.parametrize("name", ["guppy", "chiron"])
@@ -254,8 +187,7 @@ def test_packed_decode_windows_trace_has_zero_weight_quant_ops():
 
     closed = jax.make_jaxpr(stage)(packed, windows, lengths)
     n = len(jax.tree_util.tree_leaves(packed))
-    tainted = set(closed.jaxpr.invars[:n])
-    assert _weight_quant_eqns(closed.jaxpr, tainted) == []
+    assert jt.weight_quant_eqns(closed, n) == []
 
 
 def test_lm_packed_trace_has_zero_weight_quant_ops():
@@ -276,8 +208,7 @@ def test_lm_packed_trace_has_zero_weight_quant_ops():
         closed = jax.make_jaxpr(
             lambda p, b: lm_lib.forward(p, c, b)[0])(p, batch)
         n = len(jax.tree_util.tree_leaves(p))
-        tainted = set(closed.jaxpr.invars[:n])
-        return len(_weight_quant_eqns(closed.jaxpr, tainted))
+        return len(jt.weight_quant_eqns(closed, n))
 
     assert count(params, cfg) > 0       # positive control: per-call path
     assert count(packed, scfg) == 0     # the artifact quantizes no weights
