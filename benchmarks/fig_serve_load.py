@@ -48,7 +48,8 @@ def _basecall_requests(pipe, n: int, seed: int = 0):
         for _ in range(n)]
 
 
-def _build_lm_server(slots: int, backpressure: str, max_queue: int):
+def _build_lm_server(slots: int, backpressure: str, max_queue: int,
+                     max_len: int = 64, **engine_kw):
     import jax
 
     from repro.models import lm as lm_lib
@@ -58,7 +59,8 @@ def _build_lm_server(slots: int, backpressure: str, max_queue: int):
     cfg = lm_lib.LMConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
                           d_ff=64, vocab_size=64, remat=False)
     params = lm_lib.init_lm(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(params, cfg, batch_slots=slots, max_len=64)
+    eng = ServingEngine(params, cfg, batch_slots=slots, max_len=max_len,
+                        **engine_kw)
     return Server(eng, max_queue=max_queue, backpressure=backpressure), cfg
 
 
@@ -82,6 +84,7 @@ def open_loop(srv, requests, rate: float):
     arrivals = [i / rate for i in range(len(requests))]
     i = 0
     max_queue_depth = 0
+    max_active = 0
     while i < len(requests) or srv.pending():
         now = srv.clock() - t0
         while i < len(requests) and arrivals[i] <= now:
@@ -91,20 +94,24 @@ def open_loop(srv, requests, rate: float):
                               len(srv.engine.sched.queue))
         if srv.pending():
             srv.step()
+            max_active = max(max_active,
+                             int(srv.engine.sched.active_mask().sum()))
         elif i < len(requests):
             time.sleep(min(arrivals[i] - now, 0.005))
-    return max_queue_depth
+    return max_queue_depth, max_active
 
 
 def _one_engine(name: str, srv, requests, rate: float, units_of):
     # warm the jitted paths so compile time doesn't pollute the open loop
     srv.submit(requests[0]).result()
     srv.reset_metrics()
-    depth = open_loop(srv, requests, rate)
+    depth, max_active = open_loop(srv, requests, rate)
     m = srv.metrics()
     rows = m.rows(prefix=f"serve_load/{name}")
     rows.append((f"serve_load/{name}/max_queue_depth", str(depth),
                  f"offered rate {rate:.1f} req/s"))
+    rows.append((f"serve_load/{name}/max_sustained_lanes", str(max_active),
+                 "peak concurrently-active slots over the run"))
     units = sum(units_of(r) for r in srv.results.values() if r.ok)
     rows.append((f"serve_load/{name}/units_per_s",
                  f"{units / m.elapsed_s:.1f}",
@@ -131,6 +138,49 @@ def run(smoke: bool = True, engine: str = "both", requests: int = None,
         reqs = _lm_requests(cfg, n, max_tokens)
         rows += _one_engine("lm", srv, reqs, rate,
                             lambda r: len(r.value))
+        rows += _paged_sweep(smoke, backpressure, max_tokens)
+    return rows
+
+
+def _paged_sweep(smoke: bool, backpressure: str, max_tokens: int):
+    """Dense vs paged KV at a FIXED arena budget (same KV tokens of
+    memory): the dense layout reserves ``max_len`` per lane, so its lane
+    count is ``budget / max_len``; the paged layout spends the same
+    budget on ``budget / kv_block`` pooled blocks and lets short requests
+    pack many more concurrent lanes (preemption keeps overflow correct).
+
+    Emits per layout: max sustained concurrent lanes, p50/p99 latency,
+    tokens/s — the concurrency axis of the paged-cache tentpole.
+    """
+    max_len = 64
+    kv_block = 8
+    dense_slots = 2 if smoke else 8
+    budget = dense_slots * max_len          # KV tokens, both layouts
+    n = 16 if smoke else 64
+    rate = 200.0                            # saturating offered load
+    layouts = (
+        ("dense", dense_slots, {}),
+        ("paged", 4 * dense_slots,
+         {"kv_layout": "paged", "kv_block": kv_block,
+          "kv_blocks": budget // kv_block}),
+    )
+    rows = []
+    for name, slots, kw in layouts:
+        srv, cfg = _build_lm_server(slots, backpressure,
+                                    max_queue=max(2 * n, 4),
+                                    max_len=max_len, **kw)
+        reqs = _lm_requests(cfg, n, max_tokens, seed=7)
+        sub = _one_engine(f"kv_budget/{name}", srv, reqs, rate,
+                          lambda r: len(r.value))
+        keep = ("max_sustained_lanes", "latency_p50_s", "latency_p99_s",
+                "units_per_s")
+        rows += [r for r in sub if r[0].rsplit("/", 1)[-1] in keep]
+        if name == "paged":
+            eng = srv.engine
+            rows.append((f"serve_load/kv_budget/paged/preemptions",
+                         str(eng.preemptions),
+                         f"{eng.n_kv_blocks} blocks x {kv_block} tokens "
+                         f"= {budget} KV-token budget"))
     return rows
 
 

@@ -124,20 +124,27 @@ def build_basecall_engine_case(mesh=None) -> TraceCase:
                      pipe.decode_stage_boundaries(), mesh is not None)
 
 
-def build_lm_engine_case(mesh=None) -> TraceCase:
-    """ServingEngine's jitted decode step over the packed LM artifact.
-
-    The LM decode batch runs unsharded by design (dp scales capacity
-    only), so it declares no stage boundaries.
-    """
+def _tiny_lm_cfg():
     from repro.core.quant import QuantConfig
     from repro.models import lm as lm_lib
-    from repro.serve.engine import ServingEngine
 
-    cfg = lm_lib.LMConfig(
+    return lm_lib.LMConfig(
         n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
         vocab_size=64, quant=QuantConfig(enabled=True, bits_w=5, bits_a=5),
         remat=False)
+
+
+def build_lm_engine_case(mesh=None) -> TraceCase:
+    """ServingEngine's jitted decode step over the packed LM artifact.
+
+    Under an ambient mesh the (B,) step batch dp-shards lane-major
+    (``models.decode.lm_stage_boundaries`` declares the constrained
+    stages), mirroring the basecall engine's step."""
+    from repro.models import decode as decode_lib
+    from repro.models import lm as lm_lib
+    from repro.serve.engine import ServingEngine
+
+    cfg = _tiny_lm_cfg()
     params = lm_lib.init_lm(jax.random.PRNGKey(0), cfg)
     with _mesh_ctx(mesh):
         eng = ServingEngine(params, cfg, batch_slots=2, max_len=16)
@@ -147,7 +154,29 @@ def build_lm_engine_case(mesh=None) -> TraceCase:
             eng.params, eng.cache, tokens, active)
     n = len(jax.tree_util.tree_leaves(eng.params))
     return TraceCase(f"serving_engine.step{_tag('lm', mesh)}", closed, n,
-                     (), mesh is not None)
+                     decode_lib.lm_stage_boundaries(), mesh is not None)
+
+
+def build_paged_lm_engine_case(mesh=None) -> TraceCase:
+    """ServingEngine's decode step on the PAGED KV layout (block-table
+    gathers through the pooled arena; same declared stage boundaries as
+    the dense step)."""
+    from repro.models import decode as decode_lib
+    from repro.models import lm as lm_lib
+    from repro.serve.engine import ServingEngine
+
+    cfg = _tiny_lm_cfg()
+    params = lm_lib.init_lm(jax.random.PRNGKey(0), cfg)
+    with _mesh_ctx(mesh):
+        eng = ServingEngine(params, cfg, batch_slots=2, max_len=16,
+                            kv_layout="paged", kv_block=4)
+        tokens = jnp.zeros((eng.B,), jnp.int32)
+        active = jnp.ones((eng.B,), bool)
+        closed = jax.make_jaxpr(eng._decode)(
+            eng.params, eng.cache, tokens, active, eng._ship_tables())
+    n = len(jax.tree_util.tree_leaves(eng.params))
+    return TraceCase(f"serving_engine.step{_tag('lm-paged', mesh)}", closed,
+                     n, decode_lib.lm_stage_boundaries(), mesh is not None)
 
 
 def build_cases(presets: Sequence[str] = ("guppy", "chiron"),
@@ -158,10 +187,12 @@ def build_cases(presets: Sequence[str] = ("guppy", "chiron"),
         cases += build_pipeline_cases(preset, None)
     cases.append(build_basecall_engine_case(None))
     cases.append(build_lm_engine_case(None))
+    cases.append(build_paged_lm_engine_case(None))
     if mesh is not None:
         cases += build_pipeline_cases(presets[0], mesh)
         cases.append(build_basecall_engine_case(mesh))
         cases.append(build_lm_engine_case(mesh))
+        cases.append(build_paged_lm_engine_case(mesh))
     return cases
 
 
@@ -289,6 +320,19 @@ def retrace_findings(mesh=None) -> List[Finding]:
     if n != 1:
         found.append(Finding(
             "trace-retrace", "serving_engine.step[lm]",
+            f"two same-aval calls compiled {n} jit entries (expected 1)"))
+
+    # paged layout: block tables ship with a FIXED (B, max_blocks) shape
+    # precisely so lane growth never retraces — guard that here
+    eng_p = ServingEngine(params, cfg, batch_slots=2, max_len=8,
+                          kv_layout="paged", kv_block=4)
+    bt = eng_p._ship_tables()
+    _, cache = eng_p._decode(eng_p.params, eng_p.cache, tokens, active, bt)
+    eng_p._decode(eng_p.params, cache, tokens, active, bt)
+    n = eng_p._decode._cache_size()
+    if n != 1:
+        found.append(Finding(
+            "trace-retrace", "serving_engine.step[lm-paged]",
             f"two same-aval calls compiled {n} jit entries (expected 1)"))
     return found
 

@@ -63,6 +63,98 @@ def _decode_kernel(nv_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
                     jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(bt_ref, nv_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+                         l_ref, acc_ref, *, bs: int, kv_heads: int,
+                         groups: int):
+    """Same online softmax as ``_decode_kernel``, but the (1, bs, Kv, D)
+    K/V block arriving each grid step was fetched THROUGH the block table
+    (scalar-prefetch index map, see ``paged_decode_attn_pallas``) — the
+    kernel body only re-derives which token positions the block covers
+    (``j * bs + iota``) for the validity mask."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, M_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (Kv*G, D)
+    k = k_ref[0].astype(jnp.float32)                   # (bs, Kv, D)
+    v = v_ref[0].astype(jnp.float32)
+    D = q.shape[-1]
+    qh = q.reshape(kv_heads, groups, D) * (D ** -0.5)
+
+    s = jnp.einsum("hgd,lhd->hgl", qh, k)              # (Kv, G, bs)
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    s = jnp.where(pos < nv_ref[b, 0], s, MASK_NEG)
+    s = s.reshape(kv_heads * groups, bs)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_old - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    pv = jnp.einsum("hgl,lhd->hgd", p.reshape(kv_heads, groups, bs),
+                    v).reshape(kv_heads * groups, D)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+def paged_decode_attn_pallas(q: jnp.ndarray, k_arena: jnp.ndarray,
+                             v_arena: jnp.ndarray,
+                             block_tables: jnp.ndarray,
+                             n_valid: jnp.ndarray, *, groups: int,
+                             interpret: bool = False) -> jnp.ndarray:
+    """q (B, Kv*G, D); arenas (N, bs, Kv, D) pooled KV blocks;
+    block_tables (B, nb) int32; n_valid (B, 1) int32.
+
+    Returns (B, Kv*G, D).  Grid (B, nb): the block table rides in as a
+    SCALAR-PREFETCH operand so the K/V BlockSpec index map can address
+    arena row ``block_tables[b, j]`` at grid step (b, j) — the kernel
+    streams exactly the blocks each lane owns, never materializing the
+    (B, nb*bs, Kv, D) gather the jnp reference builds.
+    """
+    import functools
+
+    B, H, D = q.shape
+    N, bs, Kv, _ = k_arena.shape
+    nb = block_tables.shape[1]
+    assert H == Kv * groups
+
+    kern = functools.partial(_paged_decode_kernel, bs=bs, kv_heads=Kv,
+                             groups=groups)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, bt, nv: (b, 0, 0)),
+            pl.BlockSpec((1, bs, Kv, D),
+                         lambda b, j, bt, nv: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, Kv, D),
+                         lambda b, j, bt, nv: (bt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, j, bt, nv: (b, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((H, 1), jnp.float32),
+                        pltpu.VMEM((H, 1), jnp.float32),
+                        pltpu.VMEM((H, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, n_valid, q, k_arena, v_arena)
+
+
 def decode_attn_pallas(q: jnp.ndarray, k_cache: jnp.ndarray,
                        v_cache: jnp.ndarray, n_valid: jnp.ndarray,
                        *, groups: int, bl: int = 256,

@@ -7,8 +7,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import registry
-from repro.kernels.decode_attn.kernel import decode_attn_pallas
-from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.kernels.decode_attn.kernel import (decode_attn_pallas,
+                                              paged_decode_attn_pallas)
+from repro.kernels.decode_attn.ref import (decode_attn_ref,
+                                           paged_decode_attn_ref)
 
 
 def _impl_pallas(q, k_cache, v_cache, n_valid, *, groups: int, bl: int = 256,
@@ -46,6 +48,39 @@ registry.register_op("decode_attn", ref=_impl_ref, pallas=_impl_pallas,
                      example=_example)
 
 
+def _impl_paged_pallas(q, k_arena, v_arena, block_tables, n_valid, *,
+                       groups: int, interpret: bool = False) -> jnp.ndarray:
+    """No padding wrapper needed: the arena is block-shaped by
+    construction (every BlockSpec block divides it exactly)."""
+    return paged_decode_attn_pallas(q, k_arena, v_arena,
+                                    block_tables.astype(jnp.int32),
+                                    n_valid.reshape(-1, 1).astype(jnp.int32),
+                                    groups=groups, interpret=interpret)
+
+
+def _impl_paged_ref(q, k_arena, v_arena, block_tables, n_valid, *,
+                    groups: int) -> jnp.ndarray:
+    return paged_decode_attn_ref(q, k_arena, v_arena,
+                                 block_tables.astype(jnp.int32),
+                                 n_valid.reshape(-1, 1).astype(jnp.int32),
+                                 groups=groups)
+
+
+def _paged_example():
+    """Partially-filled lanes over a shared 16-block arena (block tables
+    deliberately non-contiguous; lane validity ragged vs nb*bs)."""
+    B, N, bs, Kv, G, D, nb = 2, 16, 8, 2, 3, 16, 3
+    return ((jnp.zeros((B, Kv * G, D), jnp.float32),
+             jnp.zeros((N, bs, Kv, D), jnp.float32),
+             jnp.zeros((N, bs, Kv, D), jnp.float32),
+             jnp.asarray([[3, 7, 1], [12, 0, 5]], jnp.int32),
+             jnp.asarray([5, 20], jnp.int32)), {"groups": G})
+
+
+registry.register_op("paged_decode_attn", ref=_impl_paged_ref,
+                     pallas=_impl_paged_pallas, example=_paged_example)
+
+
 @functools.partial(jax.jit, static_argnames=("groups", "bl", "backend"))
 def _dispatch(q, k_cache, v_cache, n_valid, *, groups, bl, backend):
     return registry.get_op("decode_attn", backend)(
@@ -63,4 +98,26 @@ def decode_attn(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      backend=registry.resolve_backend(backend))
 
 
-__all__ = ["decode_attn", "decode_attn_ref"]
+@functools.partial(jax.jit, static_argnames=("groups", "backend"))
+def _dispatch_paged(q, k_arena, v_arena, block_tables, n_valid, *, groups,
+                    backend):
+    return registry.get_op("paged_decode_attn", backend)(
+        q, k_arena, v_arena, block_tables, n_valid, groups=groups)
+
+
+def paged_decode_attn(q: jnp.ndarray, k_arena: jnp.ndarray,
+                      v_arena: jnp.ndarray, block_tables: jnp.ndarray,
+                      n_valid: jnp.ndarray, *, groups: int,
+                      backend: str | None = None) -> jnp.ndarray:
+    """Single-token GQA attention over a PAGED block arena.
+
+    q (B, H, D); arenas (N, bs, Kv, D) with H = Kv*groups; block_tables
+    (B, nb) int32 arena rows per lane; n_valid (B,) tokens written.
+    Backend resolves before the jit boundary (see quant_matmul.ops)."""
+    return _dispatch_paged(q, k_arena, v_arena, block_tables, n_valid,
+                           groups=groups,
+                           backend=registry.resolve_backend(backend))
+
+
+__all__ = ["decode_attn", "decode_attn_ref", "paged_decode_attn",
+           "paged_decode_attn_ref"]

@@ -1,7 +1,7 @@
 """Pure-jnp oracle: models/layers.decode_attention reshaped to kernel I/O."""
 import jax.numpy as jnp
 
-from repro.models.layers import decode_attention
+from repro.models.layers import decode_attention, paged_decode_attention
 
 
 def decode_attn_ref(q, k_cache, v_cache, n_valid, groups):
@@ -10,4 +10,14 @@ def decode_attn_ref(q, k_cache, v_cache, n_valid, groups):
     L = k_cache.shape[1]
     valid = jnp.arange(L)[None, :] < n_valid
     out = decode_attention(q[:, None], k_cache, v_cache, valid)
+    return out[:, 0]
+
+
+def paged_decode_attn_ref(q, k_arena, v_arena, block_tables, n_valid,
+                          groups):
+    """q (B, H, D); arenas (N, bs, Kv, D); block_tables (B, nb);
+    n_valid (B, 1) -> (B, H, D).  Materializes the per-lane gather the
+    Pallas kernel streams through its block-table index map."""
+    out = paged_decode_attention(q[:, None], k_arena, v_arena,
+                                 block_tables, n_valid[:, 0])
     return out[:, 0]

@@ -47,6 +47,7 @@ _OP_MODULES = {
     "masked_logsumexp": "repro.kernels.ctc_merge.ops",
     "beam_merge_topk": "repro.kernels.ctc_merge.ops",
     "decode_attn": "repro.kernels.decode_attn.ops",
+    "paged_decode_attn": "repro.kernels.decode_attn.ops",
     "mismatch_bits": "repro.kernels.vote_cmp.ops",
 }
 

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from repro.core.quant import qdense
 from repro.dist.sharding import constrain
 from repro.models import lm as lm_lib
-from repro.models.layers import decode_attention, mamba_mix
+from repro.models.layers import (decode_attention, mamba_mix,
+                                 paged_decode_attention)
 from repro.models.lm import (LMConfig, _block, _enc_kv, _mlp, _moe_apply,
                              _norm, _positions, _qkv, _run_encoder,
                              _self_attn)
@@ -71,6 +72,42 @@ def init_cache(cfg: LMConfig, B: int, max_len: int, enc_len: int = 0):
     L = cache_len(cfg, max_len)
     blocks = jax.vmap(lambda _: _block_cache(cfg, B, L, enc_len))(
         jnp.arange(cfg.n_blocks))
+    return {"blocks": blocks, "pos": jnp.zeros((B,), jnp.int32)}
+
+
+def init_paged_cache(cfg: LMConfig, B: int, n_kv_blocks: int,
+                     block_size: int):
+    """Paged KV cache: ONE pooled arena of fixed-size blocks per layer.
+
+    Instead of a dense per-lane (B, L, Kv, hd) ring, every layer holds a
+    (n_kv_blocks, block_size, Kv, hd) arena; which blocks a lane owns (and
+    in what order) lives OUTSIDE the trace in the engine's block tables.
+    Total KV memory is ``n_kv_blocks * block_size`` tokens shared by all
+    lanes — lane count decouples from max context (the vLLM layout,
+    SNIPPETS.md snippets 1-2).
+
+    Only plain attention stacks page (kinds "attn"/"moe"); sliding-window
+    configs keep the dense ring (the window wrap IS the intended layout)
+    and SSM/hybrid state is O(1) per lane already.
+    """
+    kind = lm_lib._decoder_kind(cfg)
+    if kind not in ("attn", "moe"):
+        raise ValueError(
+            f"paged KV cache supports attention decoders only, not "
+            f"{kind!r} (SSM/hybrid state is O(1) per lane; use the dense "
+            "cache)")
+    if cfg.window:
+        raise ValueError(
+            "paged KV cache does not apply to sliding-window configs; "
+            "the dense ring (cache_len = min(window, max_len)) is the "
+            "intended layout there")
+
+    def one_layer(_):
+        shape = (n_kv_blocks, block_size, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, cfg.dtype),
+                "v": jnp.zeros(shape, cfg.dtype)}
+
+    blocks = jax.vmap(one_layer)(jnp.arange(cfg.n_blocks))
     return {"blocks": blocks, "pos": jnp.zeros((B,), jnp.int32)}
 
 
@@ -231,12 +268,58 @@ def _decode_attn(x, bp, cfg: LMConfig, cache, prefix, p, active):
     return out, {prefix + "k": k_c, prefix + "v": v_c}
 
 
+def _decode_attn_paged(x, bp, cfg: LMConfig, cache, p, active,
+                       block_tables):
+    """One-token self-attention against the paged block arena.
+
+    x: (B, 1, d); cache holds per-layer arenas {"k","v"} of shape
+    (N, bs, Kv, hd); block_tables: (B, nb) int32 — lane i's logical block
+    j lives at arena row ``block_tables[i, j]`` (unallocated entries are
+    clipped to 0 by the engine and masked by ``n_valid``).
+
+    The per-step ``slot_mapping`` is derived IN-TRACE from (pos,
+    block_tables): token position p writes arena slot
+    ``block_tables[i, p // bs] * bs + p % bs``.  Inactive lanes map to the
+    out-of-range slot N*bs, which ``mode="drop"`` turns into a no-op —
+    the same freeze contract as the dense ring.
+    """
+    B = x.shape[0]
+    k_a, v_a = cache["k"], cache["v"]
+    N, bs, Kv, hd = k_a.shape
+    pos = _positions(cfg, B, 1, offset=p)
+    q, k, v = _qkv(x, bp, cfg, pos)
+    blk = jnp.take_along_axis(block_tables, (p // bs)[:, None], axis=1)[:, 0]
+    slot = jnp.where(active, blk * bs + p % bs, N * bs)   # N*bs => dropped
+    k_a = k_a.reshape(N * bs, Kv, hd).at[slot].set(
+        k[:, 0], mode="drop").reshape(N, bs, Kv, hd)
+    v_a = v_a.reshape(N * bs, Kv, hd).at[slot].set(
+        v[:, 0], mode="drop").reshape(N, bs, Kv, hd)
+    out = paged_decode_attention(q, k_a, v_a, block_tables, p + 1)
+    out = qdense(out.reshape(B, 1, -1), bp["wo"], cfg.quant)
+    return out, {"k": k_a, "v": v_a}
+
+
+def lm_stage_boundaries() -> Tuple[str, ...]:
+    """The LM decode step's declared sharding stage boundaries.
+
+    Single source of truth for ``repro.analysis``: each name must appear
+    as a ``stage:<name>`` scope on a sharding constraint in the meshed
+    serving trace of ``decode_step`` (both dense and paged).  The step
+    batch shards lane-major over "dp" — mirroring
+    ``models.basecaller.serving_stage_boundaries``.
+    """
+    return ("lm_embed", "lm_logits")
+
+
 def decode_step(params, cfg: LMConfig, cache, tokens=None, embeds=None,
-                active=None):
+                active=None, block_tables=None):
     """One decoding step for the whole batch.
 
     tokens: (B,) int32 (or embeds (B, 1, d) for stub-frontend archs).
     active: optional (B,) bool — continuous batching lane mask.
+    block_tables: optional (B, nb) int32 — selects the PAGED cache layout
+        (cache from ``init_paged_cache``; attention gathers K/V through
+        the table instead of a per-lane ring).
     Returns (logits (B, vocab), new cache).
     """
     if tokens is not None:
@@ -244,10 +327,17 @@ def decode_step(params, cfg: LMConfig, cache, tokens=None, embeds=None,
     else:
         x = embeds.astype(cfg.dtype)
     B = x.shape[0]
+    # declared dp boundary: under an ambient mesh the step batch shards
+    # lane-major (engines keep B = batch_slots * dp); a no-op otherwise
+    with jax.named_scope("stage:lm_embed"):
+        x = constrain(x, ("dp", None, None))
     if active is None:
         active = jnp.ones((B,), bool)
     p = cache["pos"]
     kind = lm_lib._decoder_kind(cfg)
+    if block_tables is not None and kind not in ("attn", "moe"):
+        raise ValueError(f"paged decode supports attention decoders only, "
+                         f"not {kind!r}")
 
     def keep(new, old):
         """Mask recurrent-state updates for inactive lanes."""
@@ -258,8 +348,13 @@ def decode_step(params, cfg: LMConfig, cache, tokens=None, embeds=None,
         bp, bc = bp_cache
         new_c = dict(bc)
         if kind in ("attn", "moe"):
-            y, kv = _decode_attn(_norm(x, bp["ln1"], cfg), bp["attn"], cfg,
-                                 bc, "", p, active)
+            if block_tables is not None:
+                y, kv = _decode_attn_paged(_norm(x, bp["ln1"], cfg),
+                                           bp["attn"], cfg, bc, p, active,
+                                           block_tables)
+            else:
+                y, kv = _decode_attn(_norm(x, bp["ln1"], cfg), bp["attn"],
+                                     cfg, bc, "", p, active)
             x = x + y
             new_c.update(kv)
             if kind == "attn":
@@ -329,6 +424,8 @@ def decode_step(params, cfg: LMConfig, cache, tokens=None, embeds=None,
     x = _norm(x, params["final_norm"], cfg)
     head = (params["embed"].T if cfg.tie_embeddings else params["head"])
     logits = qdense(x[:, 0], head, cfg.quant)
+    with jax.named_scope("stage:lm_logits"):
+        logits = constrain(logits, ("dp", None))
     new_cache = {"blocks": new_blocks,
                  "pos": jnp.where(active, p + 1, p)}
     return logits, _shard_cache(new_cache, cfg)

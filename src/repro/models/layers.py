@@ -392,6 +392,38 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def paged_decode_attention(q: jnp.ndarray, k_arena: jnp.ndarray,
+                           v_arena: jnp.ndarray, block_tables: jnp.ndarray,
+                           n_valid: jnp.ndarray,
+                           backend=None) -> jnp.ndarray:
+    """Single-token attention over a PAGED block arena.
+
+    q: (B, 1, H, D); arenas: (N, bs, Kv, D) pooled KV blocks shared by all
+    lanes; block_tables: (B, nb) int32 — lane i's logical block j lives at
+    arena row ``block_tables[i, j]``; n_valid: (B,) int32 tokens written
+    so far (validity is a PREFIX of the gathered sequence, so unallocated
+    table entries may point anywhere in-range — the engine clips them
+    to 0).
+
+    ``backend`` (a ``repro.kernels.registry.Backend``) routes onto the
+    ``paged_decode_attn`` Pallas kernel, which streams blocks through the
+    table with a scalar-prefetch index map instead of materializing the
+    (B, nb*bs, Kv, D) gather below.
+    """
+    B, _, H, D = q.shape
+    N, bs, Kv, _ = k_arena.shape
+    if backend is not None:
+        out = backend.op("paged_decode_attn")(
+            q[:, 0], k_arena, v_arena, block_tables,
+            n_valid.astype(jnp.int32), groups=H // Kv)
+        return out[:, None].astype(q.dtype)
+    nb = block_tables.shape[1]
+    k = k_arena[block_tables].reshape(B, nb * bs, Kv, D)
+    v = v_arena[block_tables].reshape(B, nb * bs, Kv, D)
+    valid = jnp.arange(nb * bs)[None, :] < n_valid[:, None]
+    return decode_attention(q, k, v, valid)
+
+
 # ---------------------------------------------------------------------------
 # feed-forward: SwiGLU / GELU
 # ---------------------------------------------------------------------------

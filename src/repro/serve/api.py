@@ -51,6 +51,7 @@ STATUS_OK = "ok"
 STATUS_CANCELLED = "cancelled"
 STATUS_EXPIRED = "expired"
 STATUS_SHED = "shed"
+STATUS_ERROR = "error"
 
 
 class QueueFull(RuntimeError):
@@ -97,13 +98,17 @@ class ServeResult:
 
     ``value`` is engine-shaped: a ``pipeline.BasecallResult`` for signal
     reads, the generated token list for LM requests — and None when the
-    request did not complete (cancelled / expired / shed)."""
+    request did not complete (cancelled / expired / shed / error).  An
+    ``"error"`` status carries the rejection reason in ``error`` (e.g. a
+    request whose prompt + max_tokens exceeds the engine's KV capacity —
+    resolved at submit, before it could wedge a lane)."""
     rid: int
     status: str
     value: Any
     submitted_at: float
     finished_at: float
     n_events: int = 0
+    error: Optional[str] = None
 
     @property
     def ok(self) -> bool:
@@ -138,6 +143,9 @@ class ServerMetrics:
     #: the pool-wide mean
     devices: int = 1
     occupancy_per_device: tuple = (0.0,)
+    #: requests rejected at submit by engine validation (e.g. prompt +
+    #: max_tokens over the KV capacity) — resolved with status "error"
+    errors: int = 0
 
     def rows(self, prefix: str = "serve") -> List[tuple]:
         """``benchmarks._util.emit``-shaped CSV rows."""
@@ -168,6 +176,12 @@ class EngineProtocol(Protocol):
     unit of work (``step``); the server owns the request lifecycle.  The
     driver loop the engines used to hand-roll (``run()``) lives in
     ``Server`` now — engines must not grow one back.
+
+    Optional extension (duck-typed via ``getattr``, not required by the
+    protocol): ``validate(request) -> Optional[str]`` — a non-None return
+    is an error message and the server resolves the request with status
+    ``"error"`` at submit instead of queueing it (``ServingEngine`` uses
+    this to reject requests that would overflow its KV cache).
     """
     sched: SlotScheduler
     steps: int
@@ -294,8 +308,8 @@ class Server:
         # engine's dp attribute; engines without one count as 1 device)
         self._occ_dev_sum: Optional[np.ndarray] = None
         self._counts = {STATUS_OK: 0, STATUS_CANCELLED: 0,
-                        STATUS_EXPIRED: 0, STATUS_SHED: 0, "rejected": 0,
-                        "submitted": 0}
+                        STATUS_EXPIRED: 0, STATUS_SHED: 0, STATUS_ERROR: 0,
+                        "rejected": 0, "submitted": 0}
         self._started_at: Optional[float] = None
 
     # -- submission ---------------------------------------------------------
@@ -305,7 +319,11 @@ class Server:
 
         Degenerate requests (``engine.degenerate``) resolve here with an
         empty ok result — they never occupy a queue entry or a slot.
-        A full queue applies the backpressure policy (see module doc).
+        Requests the engine's (optional) ``validate`` hook rejects — e.g.
+        ``prompt + max_tokens`` over the KV capacity, which would wedge a
+        lane — resolve here with status ``"error"`` and the reason in
+        ``ServeResult.error``.  A full queue applies the backpressure
+        policy (see module doc).
 
         Args:
             request: a :class:`BasecallRequest` / :class:`LMRequest` (or
@@ -339,6 +357,13 @@ class Server:
         self._records[rid] = rec
         if self.engine.degenerate(request):
             self._resolve(rec, STATUS_OK, self.engine.empty_result(request))
+            return ServeFuture(self, rid)
+        # engines may veto requests their cache cannot serve (duck-typed:
+        # ``validate`` is an optional EngineProtocol extension) — resolve
+        # with a clear error result instead of wedging a lane later
+        err = getattr(self.engine, "validate", lambda r: None)(request)
+        if err is not None:
+            self._resolve(rec, STATUS_ERROR, None, error=err)
             return ServeFuture(self, rid)
 
         queue = self.engine.sched.queue
@@ -513,11 +538,13 @@ class Server:
                                              payload=out[rec.emitted]))
                 rec.emitted += 1
 
-    def _resolve(self, rec: _Record, status: str, value: Any) -> None:
+    def _resolve(self, rec: _Record, status: str, value: Any,
+                 error: Optional[str] = None) -> None:
         assert rec.result is None, f"request {rec.rid} resolved twice"
         res = ServeResult(rid=rec.rid, status=status, value=value,
                           submitted_at=rec.submitted_at,
-                          finished_at=self.clock(), n_events=rec.emitted)
+                          finished_at=self.clock(), n_events=rec.emitted,
+                          error=error)
         rec.result = res
         rec.events.append(ServeEvent(rid=rec.rid, kind="final",
                                      index=rec.emitted, payload=res))
@@ -587,6 +614,7 @@ class Server:
             expired=self._counts[STATUS_EXPIRED],
             shed=self._counts[STATUS_SHED],
             rejected=self._counts["rejected"],
+            errors=self._counts[STATUS_ERROR],
             queue_depth=len(self.engine.sched.queue),
             active=int(self.engine.sched.active_mask().sum()),
             occupancy=self._occ_sum / steps if steps else 0.0,

@@ -14,6 +14,30 @@ padded prompt bucket — one device call per admission instead of one per
 prompt token (prompts are padded to the next power of two to bound
 retraces; padded steps carry an all-False active mask, i.e. are no-ops).
 
+Two KV-cache layouts (``kv_layout``):
+
+  dense   one (B, L, Kv, hd) ring per layer, L = max_len (or the SWA
+          window) — every lane reserves max-context memory up front.
+  paged   one pooled (n_kv_blocks, block_size, Kv, hd) arena per layer
+          (``models.decode.init_paged_cache``); lanes own arbitrary
+          arena blocks via host-side BLOCK TABLES and the free-block
+          allocator in ``SlotScheduler`` hands blocks out at admission,
+          grows lanes one block at a time mid-flight, and reclaims on
+          retire/release.  Lane count decouples from max context: memory
+          follows actual sequence lengths, not the worst case.  When the
+          arena partition runs dry mid-flight the lane is PREEMPTED —
+          released and requeued at the queue front; greedy decode is
+          deterministic, so refolding prompt + generated-so-far resumes
+          bitwise identically.
+
+Under an ambient ``dist.sharding.use_mesh`` at construction the engine
+dp-shards its step like ``BasecallEngine``: params replicate across
+devices, the (B,) step batch and the KV cache (lane dim dense / arena dim
+paged) split over the logical "dp" axis, and the construction mesh is
+re-installed around every device call.  The allocator's per-group
+partitions align with the arena sharding, so each lane's block-table
+gather stays device-local.
+
 This is iteration-level scheduling (Orca-style) on a cache whose per-slot
 positions make lanes fully independent; launch/specs.py's ``decode`` cells
 lower exactly one engine step on the production mesh.
@@ -37,6 +61,8 @@ from repro.models import decode as decode_lib
 from repro.models import lm as lm_lib
 from repro.serve.scheduler import SlotScheduler
 
+KV_LAYOUTS = ("dense", "paged")
+
 
 @dataclasses.dataclass
 class Request:
@@ -56,18 +82,32 @@ class ServingEngine:
         cfg: its ``lm.LMConfig`` (must embed token inputs).
         batch_slots: device lanes **per dp device** — under an ambient
             ``dist.sharding.use_mesh`` mesh at construction the pool is
-            ``batch_slots * dp_size`` lanes (dp = 1 without a mesh).
-            Capacity scaling only: unlike ``BasecallEngine``, the LM
-            decode batch itself still runs unsharded (dp-sharding the
-            KV cache is an open item).
-        max_len: KV-cache length per lane.
+            ``batch_slots * dp_size`` lanes (dp = 1 without a mesh) and
+            each step's (B,) batch + KV cache shard over the mesh's
+            data-parallel devices.
+        max_len: maximum context (prompt + generated) per lane.  Dense
+            mode allocates this much KV per lane; paged mode only caps
+            per-lane block-table width.
         pack: serve the quantize-once packed artifact (False keeps the
             float tree + per-call quantization as the oracle).
+        kv_layout: "dense" (per-lane KV ring) or "paged" (pooled block
+            arena + block tables; attention-decoder, no-SWA configs only).
+        kv_block: paged mode: tokens per KV block.
+        kv_blocks: paged mode: total arena size in blocks (rounded up to
+            a dp multiple).  Defaults to dense-equivalent capacity,
+            ``B * ceil(max_len / kv_block)``; smaller values trade
+            worst-case capacity for more lanes per byte (preemption
+            keeps overflow correct).
     """
 
     def __init__(self, params, cfg: lm_lib.LMConfig, batch_slots: int = 8,
-                 max_len: int = 256, pack: bool = True):
+                 max_len: int = 256, pack: bool = True,
+                 kv_layout: str = "dense", kv_block: int = 16,
+                 kv_blocks: Optional[int] = None):
         assert cfg.embed_inputs, "engine serves token models"
+        if kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"unknown kv_layout {kv_layout!r}; "
+                             f"one of {KV_LAYOUTS}")
         if pack:
             # the engine holds the quantize-once serving artifact: every
             # qdense weight pre-snapped to the b-bit grid, so the jitted
@@ -75,56 +115,153 @@ class ServingEngine:
             # when cfg.quant is disabled).  pack=False keeps the float
             # tree + per-call quantization as the differential oracle.
             params, cfg = lm_lib.pack_lm_serving(params, cfg)
-        self.params = params
         self.cfg = cfg
-        # slot capacity scales with the ambient mesh's data-parallel size
-        # (batch_slots lanes per dp device; dp = 1 single-device)
-        self.dp = shd.dp_size()
+        # slot capacity AND the step batch scale with the ambient mesh's
+        # data-parallel size (batch_slots lanes per dp device; dp = 1
+        # single-device) — the mesh is captured here and re-installed
+        # around every device call, exactly like BasecallEngine
+        self.mesh = shd.get_mesh()
+        self.dp = shd.dp_size(self.mesh)
         self.B = batch_slots * self.dp
         self.max_len = max_len
-        self.cache = decode_lib.init_cache(cfg, self.B, max_len)
-        self.sched: SlotScheduler[Request] = SlotScheduler(self.B)
+        self.kv_layout = kv_layout
+        self.params = params
+        if self.mesh is not None:
+            self.params = jax.device_put(
+                self.params,
+                shd.replicated_sharding_tree(self.params, self.mesh))
+
+        if kv_layout == "paged":
+            self.kv_block = kv_block
+            #: per-lane block-table width (caps context at max_len)
+            self.max_blocks = -(-max_len // kv_block)
+            n = kv_blocks if kv_blocks is not None else \
+                self.B * self.max_blocks
+            n = -(-n // self.dp) * self.dp       # partitions must divide
+            self.n_kv_blocks = n
+            self.cache = decode_lib.init_paged_cache(cfg, self.B, n,
+                                                     kv_block)
+            self.sched: SlotScheduler[Request] = SlotScheduler(
+                self.B, kv_blocks=n, kv_groups=self.dp)
+            # host-side block tables: -1 = unallocated (clipped to 0 when
+            # shipped; those gathers are masked by n_valid = pos + 1)
+            self.block_tables = np.full((self.B, self.max_blocks), -1,
+                                        np.int32)
+            # host mirror of each lane's next write position, so growth
+            # checks never read device state
+            self.lane_pos = np.zeros((self.B,), np.int64)
+            self.preemptions = 0
+        else:
+            self.cache = decode_lib.init_cache(cfg, self.B, max_len)
+            self.sched = SlotScheduler(self.B)
+        self.cache = self._place_cache(self.cache)
         self.last_token = np.zeros((self.B,), np.int32)
         self.steps = 0
 
-        def one_step(params, cache, tokens, active):
-            logits, cache = decode_lib.decode_step(params, cfg, cache,
-                                                   tokens=tokens,
-                                                   active=active)
-            nxt = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1)
-            return nxt.astype(jnp.int32), cache
+        paged = kv_layout == "paged"
+        B = self.B
+
+        if paged:
+            def one_step(params, cache, tokens, active, block_tables):
+                logits, cache = decode_lib.decode_step(
+                    params, cfg, cache, tokens=tokens, active=active,
+                    block_tables=block_tables)
+                nxt = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1)
+                return nxt.astype(jnp.int32), cache
+        else:
+            def one_step(params, cache, tokens, active):
+                logits, cache = decode_lib.decode_step(params, cfg, cache,
+                                                       tokens=tokens,
+                                                       active=active)
+                nxt = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1)
+                return nxt.astype(jnp.int32), cache
 
         self._decode = jax.jit(one_step, donate_argnums=(1,))
 
         def reset_slot(cache, slot):
-            """Zero one lane's position (its stale KV is masked by pos)."""
+            """Zero one lane's position.  The previous tenant's K/V stays
+            in place but is UNREACHABLE: attention validity is the prefix
+            ``arange < pos + 1`` (dense; min'd with L) or ``pos + 1`` over
+            the lane's own block table (paged), and pos restarts at 0 —
+            see the cross-request isolation tests in
+            tests/test_paged_serve.py."""
             return {"blocks": cache["blocks"],
                     "pos": cache["pos"].at[slot].set(0)}
 
         self._reset_slot = jax.jit(reset_slot, donate_argnums=(0,))
 
-        B = self.B
+        if paged:
+            def fold_prompt(params, cache, tokens, valid, slot,
+                            block_tables):
+                lane = jnp.zeros((B,), bool).at[slot].set(True)
 
-        def fold_prompt(params, cache, tokens, valid, slot):
-            """Fold a padded prompt into one lane as a single scan.
+                def body(c, tv):
+                    tok, v = tv
+                    toks = jnp.zeros((B,), jnp.int32).at[slot].set(tok)
+                    _, c = decode_lib.decode_step(
+                        params, cfg, c, tokens=toks, active=lane & v,
+                        block_tables=block_tables)
+                    return c, None
 
-            tokens (P,) int32 prompt body; valid (P,) bool marks real
-            entries — padded steps mask the whole batch inactive, which
-            decode_step turns into a pure no-op (no write, no advance).
-            """
-            lane = jnp.zeros((B,), bool).at[slot].set(True)
+                cache, _ = jax.lax.scan(body, cache, (tokens, valid))
+                return cache
+        else:
+            def fold_prompt(params, cache, tokens, valid, slot):
+                """Fold a padded prompt into one lane as a single scan.
 
-            def body(c, tv):
-                tok, v = tv
-                toks = jnp.zeros((B,), jnp.int32).at[slot].set(tok)
-                _, c = decode_lib.decode_step(params, cfg, c, tokens=toks,
-                                              active=lane & v)
-                return c, None
+                tokens (P,) int32 prompt body; valid (P,) bool marks real
+                entries — padded steps mask the whole batch inactive,
+                which decode_step turns into a pure no-op (no write, no
+                advance)."""
+                lane = jnp.zeros((B,), bool).at[slot].set(True)
 
-            cache, _ = jax.lax.scan(body, cache, (tokens, valid))
-            return cache
+                def body(c, tv):
+                    tok, v = tv
+                    toks = jnp.zeros((B,), jnp.int32).at[slot].set(tok)
+                    _, c = decode_lib.decode_step(params, cfg, c,
+                                                  tokens=toks,
+                                                  active=lane & v)
+                    return c, None
+
+                cache, _ = jax.lax.scan(body, cache, (tokens, valid))
+                return cache
 
         self._fold = jax.jit(fold_prompt, donate_argnums=(1,))
+
+    # -- device placement --------------------------------------------------
+    def _mesh_ctx(self):
+        """The construction-time mesh, re-installed around device calls so
+        the jitted decode traces with its sharding constraints no matter
+        what mesh (if any) is ambient when the server drives us
+        (``use_mesh(None)`` masks an ambient mesh for a no-mesh engine)."""
+        return shd.use_mesh(self.mesh)
+
+    def _place_cache(self, cache):
+        """Shard the cache over dp at construction: the lane dim (dense)
+        or the pooled arena dim (paged — allocator partitions align, so
+        every lane's blocks live on its own device)."""
+        if self.mesh is None:
+            return cache
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def f(x):
+            spec = [None] * x.ndim
+            if x.ndim >= 2:                 # (layers, B-or-N, ...)
+                spec[1] = shd.logical_spec(("dp",), self.mesh)[0]
+            return jax.device_put(x, NamedSharding(self.mesh, P(*spec)))
+
+        blocks = jax.tree_util.tree_map(f, cache["blocks"])
+        pos = jax.device_put(cache["pos"],
+                             shd.batch_sharding(self.mesh, 1))
+        return {"blocks": blocks, "pos": pos}
+
+    def _put_batch(self, *arrays):
+        """device_put per-lane step inputs with dim 0 split over dp."""
+        if self.mesh is None:
+            return arrays
+        return tuple(
+            jax.device_put(a, shd.batch_sharding(self.mesh, a.ndim))
+            for a in arrays)
 
     # -- compatibility views over the scheduler ---------------------------
     @property
@@ -155,6 +292,39 @@ class ServingEngine:
     def empty_result(self, r) -> List[int]:
         return []
 
+    def validate(self, r) -> Optional[str]:
+        """Reject requests the cache cannot hold BEFORE they wedge a lane.
+
+        A request with ``len(prompt) + max_tokens > max_len`` would wrap
+        the dense KV ring (``slot = pos % L``) and silently attend over
+        clobbered history.  Sliding-window configs are exempt: there the
+        ring IS the window (``cache_len = min(window, max_len)``) and
+        wrapping is the intended layout.  Paged mode additionally rejects
+        requests larger than one arena partition (they could never admit,
+        deadlocking the FIFO queue head).
+
+        Returns an error message, or None when the request is servable.
+        """
+        P = int(np.asarray(r.prompt).shape[0])
+        total = P + int(r.max_tokens)
+        if self.cfg.window:
+            return None                 # ring wrap is the SWA design
+        if total > self.max_len:
+            return (f"prompt ({P} tokens) + max_tokens ({r.max_tokens}) "
+                    f"= {total} exceeds max_len={self.max_len}: the KV "
+                    "cache would wrap and corrupt attention history. "
+                    "Shorten the request or raise max_len")
+        if self.kv_layout == "paged":
+            need = -(-total // self.kv_block)
+            per_group = self.n_kv_blocks // self.dp
+            if need > per_group:
+                return (f"request needs {need} KV blocks but an arena "
+                        f"partition holds {per_group} "
+                        f"({self.n_kv_blocks} blocks / {self.dp} dp "
+                        "device(s)): it could never be admitted. Raise "
+                        "kv_blocks or shorten the request")
+        return None
+
     def progress(self, native: Request) -> List[int]:
         return native.out_tokens
 
@@ -163,49 +333,136 @@ class ServingEngine:
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request):
+        err = self.validate(req)
+        if err is not None:
+            raise ValueError(err)
         self.sched.submit(req)
 
+    def _blocks_needed(self, req: Request) -> int:
+        """KV blocks a (re-)admission must hold up front: enough to cover
+        every fold write (positions 0 .. len-2), at least one so the
+        first step's write has a home.  Growth covers the rest."""
+        n = int(np.asarray(req.prompt).shape[0]) + len(req.out_tokens) - 1
+        return max(1, -(-n // self.kv_block)) if n > 0 else 1
+
     def _admit_one(self, slot: int, req: Request):
-        """Fold the prompt into `slot` while other lanes stay frozen."""
-        self.cache = self._reset_slot(self.cache, slot)
-        body = np.asarray(req.prompt[:-1], np.int32)
-        if body.size:
-            P = 1 << max(int(body.size) - 1, 0).bit_length()
-            toks = np.zeros((P,), np.int32)
-            toks[: body.size] = body
-            valid = np.zeros((P,), bool)
-            valid[: body.size] = True
-            self.cache = self._fold(self.params, self.cache,
-                                    jnp.asarray(toks), jnp.asarray(valid),
-                                    jnp.asarray(slot))
-        self.last_token[slot] = int(req.prompt[-1])
+        """Fold the prompt into `slot` while other lanes stay frozen.
+
+        After a preemption ``req.out_tokens`` is non-empty: the fold
+        replays prompt + generated-so-far, which greedy (argmax) decoding
+        makes bitwise identical to the uninterrupted run."""
+        seq = np.concatenate([np.asarray(req.prompt, np.int32),
+                              np.asarray(req.out_tokens, np.int32)])
+        if self.kv_layout == "paged":
+            # sched.admit(need_fn) pre-allocated this lane's blocks; the
+            # top-up only fires when tests drive _admit_one directly
+            need = self._blocks_needed(req)
+            have = len(self.sched.slot_blocks[slot])
+            if have < need:
+                self.sched.alloc_blocks(slot, need - have)
+            row = self.block_tables[slot]
+            row[:] = -1
+            blocks = self.sched.slot_blocks[slot]
+            row[: len(blocks)] = blocks
+            self.lane_pos[slot] = seq.size - 1
+        with self._mesh_ctx():
+            self.cache = self._reset_slot(self.cache, slot)
+            body = seq[:-1]
+            if body.size:
+                P = 1 << max(int(body.size) - 1, 0).bit_length()
+                toks = np.zeros((P,), np.int32)
+                toks[: body.size] = body
+                valid = np.zeros((P,), bool)
+                valid[: body.size] = True
+                args = [self.params, self.cache, jnp.asarray(toks),
+                        jnp.asarray(valid), jnp.asarray(slot)]
+                if self.kv_layout == "paged":
+                    args.append(self._ship_tables())
+                self.cache = self._fold(*args)
+        self.last_token[slot] = int(seq[-1])
 
     def _admit_one_unfolded(self, slot: int, req: Request):
         """Reference admission: one decode_step per prompt token.  Kept as
         the oracle the folded path is asserted against (tests/test_serve)."""
-        self.cache = self._reset_slot(self.cache, slot)
-        active = np.zeros((self.B,), bool)
-        active[slot] = True
-        for t in req.prompt[:-1]:
-            toks = np.array(self.last_token)
-            toks[slot] = int(t)
-            _, self.cache = self._decode(self.params, self.cache,
-                                         jnp.asarray(toks),
-                                         jnp.asarray(active))
-        self.last_token[slot] = int(req.prompt[-1])
+        seq = np.concatenate([np.asarray(req.prompt, np.int32),
+                              np.asarray(req.out_tokens, np.int32)])
+        if self.kv_layout == "paged":
+            need = self._blocks_needed(req)
+            have = len(self.sched.slot_blocks[slot])
+            if have < need:
+                self.sched.alloc_blocks(slot, need - have)
+            row = self.block_tables[slot]
+            row[:] = -1
+            blocks = self.sched.slot_blocks[slot]
+            row[: len(blocks)] = blocks
+            self.lane_pos[slot] = seq.size - 1
+        with self._mesh_ctx():
+            self.cache = self._reset_slot(self.cache, slot)
+            active = np.zeros((self.B,), bool)
+            active[slot] = True
+            for t in seq[:-1]:
+                toks = np.array(self.last_token)
+                toks[slot] = int(t)
+                args = [self.params, self.cache, jnp.asarray(toks),
+                        jnp.asarray(active)]
+                if self.kv_layout == "paged":
+                    args.append(self._ship_tables())
+                _, self.cache = self._decode(*args)
+        self.last_token[slot] = int(seq[-1])
 
     def admit(self) -> List[int]:
+        if self.kv_layout == "paged":
+            return self.sched.admit(self._admit_one,
+                                    need_fn=self._blocks_needed)
         return self.sched.admit(self._admit_one)
 
     # -- decoding -----------------------------------------------------------
     def active_mask(self) -> np.ndarray:
         return self.sched.active_mask()
 
+    def _ship_tables(self) -> jnp.ndarray:
+        """Block tables as shipped into the trace: fixed (B, max_blocks)
+        shape (no retraces as lanes grow), -1 clipped to 0 (those entries
+        gather garbage that n_valid masks)."""
+        bt = jnp.asarray(np.maximum(self.block_tables, 0))
+        if self.mesh is not None:
+            bt = jax.device_put(bt, shd.batch_sharding(self.mesh, 2))
+        return bt
+
+    def _ensure_capacity(self):
+        """Grow every active lane whose next write crosses a block
+        boundary; preempt (release + requeue at the queue FRONT, keeping
+        generated tokens) when its arena partition is dry.  Preempted
+        lanes free their blocks immediately, so later lanes in the same
+        partition may still grow this very step."""
+        for slot in range(self.B):
+            req = self.sched.slots[slot]
+            if req is None:
+                continue
+            have = len(self.sched.slot_blocks[slot])
+            if int(self.lane_pos[slot]) < have * self.kv_block:
+                continue
+            blk = self.sched.grow_block(slot)
+            if blk is not None:
+                self.block_tables[slot, have] = blk
+            else:
+                self.sched.release(slot)         # reclaims its blocks
+                self.block_tables[slot, :] = -1
+                self.sched.queue.insert(0, req)  # FIFO: retry first
+                self.preemptions += 1
+
     def step(self):
+        if self.kv_layout == "paged":
+            self._ensure_capacity()
         active = self.active_mask()
-        nxt, self.cache = self._decode(self.params, self.cache,
-                                       jnp.asarray(self.last_token),
-                                       jnp.asarray(active))
+        if not active.any():
+            return                  # every lane preempted this tick
+        args = [jnp.asarray(self.last_token), jnp.asarray(active)]
+        args = list(self._put_batch(*args))
+        if self.kv_layout == "paged":
+            args.append(self._ship_tables())
+        with self._mesh_ctx():
+            nxt, self.cache = self._decode(self.params, self.cache, *args)
         nxt = np.asarray(nxt)
         self.steps += 1
         for slot, req in enumerate(self.sched.slots):
@@ -214,7 +471,11 @@ class ServingEngine:
             tok = int(nxt[slot])
             req.out_tokens.append(tok)
             self.last_token[slot] = tok
+            if self.kv_layout == "paged":
+                self.lane_pos[slot] += 1
             if ((req.eos_id is not None and tok == req.eos_id)
                     or len(req.out_tokens) >= req.max_tokens):
                 req.done = True
                 self.sched.retire(slot, req.rid)
+                if self.kv_layout == "paged":
+                    self.block_tables[slot, :] = -1

@@ -27,13 +27,83 @@ class SlotScheduler(Generic[R]):
     Args:
         n_slots: total device lanes (under a mesh, engines size this as
             slots-per-device x dp device count).
+        kv_blocks: optional pooled KV-arena size in blocks.  When > 0 the
+            scheduler also owns the FREE-BLOCK ALLOCATOR for a paged KV
+            cache: blocks are handed out at admission (``admit`` with a
+            ``need_fn``), grown one at a time mid-flight
+            (:meth:`grow_block`), and reclaimed automatically on
+            ``retire``/``release``.  ``kv_blocks == 0`` (the default, and
+            what the basecall engine uses) leaves all block machinery
+            inert.
+        kv_groups: number of contiguous arena partitions (engines pass
+            their dp device count).  Slot ``s`` allocates only from
+            partition ``s * kv_groups // n_slots`` so that, with the arena
+            dim sharded over dp devices, every lane's block-table gather
+            stays device-local.  Must divide both ``kv_blocks`` and
+            ``n_slots``.
     """
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, kv_blocks: int = 0, kv_groups: int = 1):
         self.n_slots = n_slots
         self.slots: List[Optional[R]] = [None] * n_slots
         self.queue: List[R] = []
         self.finished: Dict[int, R] = {}
+        self.kv_blocks = kv_blocks
+        self.kv_groups = kv_groups
+        self.slot_blocks: List[List[int]] = [[] for _ in range(n_slots)]
+        if kv_blocks:
+            if kv_blocks % kv_groups or n_slots % kv_groups:
+                raise ValueError(
+                    f"kv_groups={kv_groups} must divide both "
+                    f"kv_blocks={kv_blocks} and n_slots={n_slots}")
+            per = kv_blocks // kv_groups
+            self._free = [list(range(g * per, (g + 1) * per))
+                          for g in range(kv_groups)]
+        else:
+            self._free = []
+
+    # -- the free-block allocator (paged KV arenas) ------------------------
+    def group_of(self, slot: int) -> int:
+        """The arena partition lane ``slot`` allocates from."""
+        return slot * self.kv_groups // self.n_slots
+
+    def free_blocks(self, group: Optional[int] = None) -> int:
+        """Free blocks in ``group`` (or arena-wide when ``group`` is None)."""
+        if not self.kv_blocks:
+            return 0
+        if group is None:
+            return sum(len(f) for f in self._free)
+        return len(self._free[group])
+
+    def can_alloc(self, slot: int, n: int) -> bool:
+        """True when ``slot``'s partition has ``n`` free blocks."""
+        return self.free_blocks(self.group_of(slot)) >= n
+
+    def alloc_blocks(self, slot: int, n: int) -> List[int]:
+        """Assign ``n`` blocks from ``slot``'s partition to ``slot``."""
+        free = self._free[self.group_of(slot)]
+        if len(free) < n:
+            raise RuntimeError(
+                f"slot {slot}: need {n} KV blocks, partition has "
+                f"{len(free)} free (check can_alloc first)")
+        taken, self._free[self.group_of(slot)] = free[:n], free[n:]
+        self.slot_blocks[slot].extend(taken)
+        return taken
+
+    def grow_block(self, slot: int) -> Optional[int]:
+        """Extend ``slot`` by one block; None when its partition is dry
+        (the engine preempts the lane and requeues its request)."""
+        if not self.can_alloc(slot, 1):
+            return None
+        return self.alloc_blocks(slot, 1)[0]
+
+    def reclaim_blocks(self, slot: int) -> None:
+        """Return every block held by ``slot`` to its partition free list
+        (sorted so allocation order is deterministic)."""
+        if self.slot_blocks[slot]:
+            g = self.group_of(slot)
+            self._free[g] = sorted(self._free[g] + self.slot_blocks[slot])
+            self.slot_blocks[slot] = []
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: R) -> None:
@@ -41,16 +111,37 @@ class SlotScheduler(Generic[R]):
         priority ordering on top)."""
         self.queue.append(req)
 
-    def admit(self, admit_fn: Callable[[int, R], None]) -> List[int]:
+    def admit(self, admit_fn: Callable[[int, R], None],
+              need_fn: Optional[Callable[[R], int]] = None) -> List[int]:
         """Fill free slots from the queue; ``admit_fn(slot, req)`` does the
-        engine-specific lane setup.  Returns the slots admitted into."""
+        engine-specific lane setup.  Returns the slots admitted into.
+
+        With a ``need_fn`` (paged engines: request -> KV blocks required
+        at admission) a request is only placed into a slot whose arena
+        partition can cover it, and the blocks are allocated BEFORE
+        ``admit_fn`` runs so the engine can build the lane's block table.
+        Admission stays FIFO: when no free slot can host the queue head,
+        admission stops (head-of-line blocking) rather than starving it
+        behind smaller requests.
+        """
         admitted = []
-        for slot in range(self.n_slots):
-            if self.slots[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                admit_fn(slot, req)
-                self.slots[slot] = req
-                admitted.append(slot)
+        free = [s for s in range(self.n_slots) if self.slots[s] is None]
+        while free and self.queue:
+            req = self.queue[0]
+            if need_fn is None:
+                slot = free[0]
+            else:
+                need = need_fn(req)
+                slot = next((s for s in free if self.can_alloc(s, need)),
+                            None)
+                if slot is None:
+                    break
+                self.alloc_blocks(slot, need)
+            self.queue.pop(0)
+            admit_fn(slot, req)
+            self.slots[slot] = req
+            admitted.append(slot)
+            free.remove(slot)
         return admitted
 
     # -- state -------------------------------------------------------------
@@ -83,11 +174,13 @@ class SlotScheduler(Generic[R]):
 
     # -- retirement --------------------------------------------------------
     def retire(self, slot: int, rid: int) -> R:
-        """Free ``slot`` and move its request to ``finished[rid]``."""
+        """Free ``slot`` (reclaiming its KV blocks) and move its request
+        to ``finished[rid]``."""
         req = self.slots[slot]
         assert req is not None, f"retiring empty slot {slot}"
         self.finished[rid] = req
         self.slots[slot] = None
+        self.reclaim_blocks(slot)
         return req
 
     def drain_finished(self) -> Dict[int, R]:
@@ -101,10 +194,12 @@ class SlotScheduler(Generic[R]):
         """Free ``slot`` WITHOUT retiring (cancel/expiry: the request is
         dropped, not finished).  Both engines' lanes are masked/reassembled
         from host state each step, so an abandoned lane needs no device
-        cleanup — the next admission resets it."""
+        cleanup — the next admission resets it.  Held KV blocks are
+        reclaimed (cancel/expiry/preemption must not leak arena)."""
         req = self.slots[slot]
         assert req is not None, f"releasing empty slot {slot}"
         self.slots[slot] = None
+        self.reclaim_blocks(slot)
         return req
 
     def cancel_queued(self, req: R) -> bool:

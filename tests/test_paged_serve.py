@@ -1,0 +1,373 @@
+"""Paged KV-cache serving: kernel parity, engine oracle parity, the
+free-block allocator, and the ring-overflow / stale-KV regressions.
+
+Layers of proof:
+  * ``paged_decode_attn`` ref == interpret == the dense-gather oracle on
+    ragged lane validity and shuffled block tables;
+  * the paged ``ServingEngine`` (folded and unfolded admission, with and
+    without arena contention/preemption, with and without a dp mesh) is
+    bitwise identical to the dense engine and to sequential full-forward
+    decoding;
+  * property-style allocator sweep — random admit/grow/retire/release
+    sequences never double-assign a block, never cross a partition,
+    never exceed the arena, and reclaim every block on drain;
+  * regressions: over-length requests resolve with a clear error result
+    instead of wedging a lane (sliding-window configs keep their
+    intentional wrap), and a slot reused after a mid-flight release can
+    never attend the previous tenant's keys.
+"""
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfg_reg
+from repro.models import lm as lm_lib
+from repro.serve import LMRequest, Server, SlotScheduler
+from repro.serve.engine import Request, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _setup(seed=0):
+    cfg = dataclasses.replace(cfg_reg.get_smoke("qwen2.5-3b"), remat=False)
+    params = lm_lib.init_lm(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def _reference_generate(params, cfg, prompt, n_tokens):
+    """Greedy decode by repeatedly running the full forward (oracle)."""
+    toks = list(prompt)
+    out = []
+    for _ in range(n_tokens):
+        logits, _ = lm_lib.forward(params, cfg,
+                                   {"tokens": jnp.asarray([toks])})
+        nxt = int(jnp.argmax(logits[0, -1, : cfg.vocab_size]))
+        out.append(nxt)
+        toks.append(nxt)
+    return out
+
+
+def _serve_all(eng, prompts, budgets):
+    srv = Server(eng)
+    futs = [srv.submit(LMRequest(prompt=np.asarray(p), max_tokens=m))
+            for p, m in zip(prompts, budgets)]
+    res = srv.run_until_idle()
+    return [res[f.rid].value for f in futs]
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: paged_decode_attn across backends vs the gather oracle
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_attn_backend_parity():
+    from repro.kernels.decode_attn.ops import paged_decode_attn
+    from repro.models.layers import paged_decode_attention
+
+    rng = np.random.default_rng(0)
+    B, N, bs, Kv, G, D, nb = 3, 16, 8, 2, 3, 16, 3
+    q = jnp.asarray(rng.normal(size=(B, Kv * G, D)), jnp.float32)
+    k_a = jnp.asarray(rng.normal(size=(N, bs, Kv, D)), jnp.float32)
+    v_a = jnp.asarray(rng.normal(size=(N, bs, Kv, D)), jnp.float32)
+    # non-contiguous tables; lanes ragged vs nb*bs (incl. single token)
+    bt = jnp.asarray([[3, 7, 1], [12, 0, 5], [9, 2, 14]], jnp.int32)
+    nv = jnp.asarray([5, 24, 1], jnp.int32)
+
+    oracle = paged_decode_attention(q[:, None], k_a, v_a, bt, nv)[:, 0]
+    for backend in ("ref", "interpret"):
+        got = paged_decode_attn(q, k_a, v_a, bt, nv, groups=G,
+                                backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=backend)
+
+
+def test_paged_decode_attn_matches_dense_gather():
+    """A lane's paged attention == dense attention over its own tokens."""
+    from repro.models.layers import decode_attention, paged_decode_attention
+
+    rng = np.random.default_rng(1)
+    N, bs, Kv, G, D = 8, 4, 2, 2, 8
+    q = jnp.asarray(rng.normal(size=(1, 1, Kv * G, D)), jnp.float32)
+    k_a = jnp.asarray(rng.normal(size=(N, bs, Kv, D)), jnp.float32)
+    v_a = jnp.asarray(rng.normal(size=(N, bs, Kv, D)), jnp.float32)
+    bt = jnp.asarray([[6, 1, 4]], jnp.int32)
+    nv = jnp.asarray([9], jnp.int32)
+
+    got = paged_decode_attention(q, k_a, v_a, bt, nv)
+    k = k_a[bt[0]].reshape(1, 3 * bs, Kv, D)
+    v = v_a[bt[0]].reshape(1, 3 * bs, Kv, D)
+    valid = jnp.arange(3 * bs)[None] < nv[:, None]
+    want = decode_attention(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine oracle parity
+# ---------------------------------------------------------------------------
+
+def test_paged_engine_matches_dense_and_reference():
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (4, 7, 2, 5, 8, 3)]
+    budgets = [6, 4, 8, 5, 3, 7]
+    dense = _serve_all(ServingEngine(params, cfg, batch_slots=2,
+                                     max_len=32), prompts, budgets)
+    paged = _serve_all(ServingEngine(params, cfg, batch_slots=2,
+                                     max_len=32, kv_layout="paged",
+                                     kv_block=4), prompts, budgets)
+    assert paged == dense
+    for p, m, got in zip(prompts[:3], budgets[:3], paged[:3]):
+        assert got == _reference_generate(params, cfg, p, m)
+
+
+def test_paged_folded_admission_matches_unfolded():
+    """Folded (scan) prompt admission == per-token decode_step oracle."""
+    cfg, params = _setup(1)
+    prompt = np.asarray([7, 3, 9, 1, 5], np.int32)
+
+    outs = []
+    for admit in ("_admit_one", "_admit_one_unfolded"):
+        eng = ServingEngine(params, cfg, batch_slots=2, max_len=32,
+                            kv_layout="paged", kv_block=4)
+        req = Request(rid=0, prompt=prompt, max_tokens=6)
+        getattr(eng, admit)(0, req)
+        eng.sched.slots[0] = req
+        for _ in range(6):
+            eng.step()
+        outs.append(list(req.out_tokens))
+    assert outs[0] == outs[1]
+    assert outs[0] == _reference_generate(params, cfg, prompt.tolist(), 6)
+
+
+def test_paged_preemption_resumes_bitwise():
+    """An arena too small for all lanes preempts, requeues, and still
+    reproduces the uncontended results exactly (greedy determinism)."""
+    cfg, params = _setup(3)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (5, 8, 3, 6, 4, 7)]
+    budgets = [8] * 6
+    dense = _serve_all(ServingEngine(params, cfg, batch_slots=2,
+                                     max_len=32), prompts, budgets)
+    eng = ServingEngine(params, cfg, batch_slots=2, max_len=32,
+                        kv_layout="paged", kv_block=4, kv_blocks=6)
+    assert _serve_all(eng, prompts, budgets) == dense
+    assert eng.preemptions > 0, "arena was sized to force preemption"
+    assert eng.sched.free_blocks() == eng.n_kv_blocks
+
+
+def test_paged_engine_dp_sharded(host_mesh4):
+    from repro.dist import sharding as shd
+
+    cfg, params = _setup(5)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (4, 6, 3, 7, 5, 2, 8, 4)]
+    budgets = [5, 3, 7, 4, 6, 8, 2, 5]
+    dense = _serve_all(ServingEngine(params, cfg, batch_slots=2,
+                                     max_len=32), prompts, budgets)
+    with shd.use_mesh(host_mesh4):
+        eng = ServingEngine(params, cfg, batch_slots=1, max_len=32,
+                            kv_layout="paged", kv_block=4)
+    assert eng.dp == 4 and eng.B == 4
+    assert eng.n_kv_blocks % eng.dp == 0
+    assert _serve_all(eng, prompts, budgets) == dense
+    assert eng.sched.free_blocks() == eng.n_kv_blocks
+
+
+# ---------------------------------------------------------------------------
+# ring-overflow regression (the admission bug)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_overflowing_request_resolves_with_error(kv_layout):
+    """prompt + max_tokens > max_len must resolve as a clear error result
+    at submit — not wedge a lane and silently wrap the KV ring."""
+    cfg, params = _setup()
+    kw = {"kv_block": 4} if kv_layout == "paged" else {}
+    eng = ServingEngine(params, cfg, batch_slots=2, max_len=16,
+                        kv_layout=kv_layout, **kw)
+    srv = Server(eng)
+    bad = srv.submit(LMRequest(prompt=np.arange(1, 10), max_tokens=16))
+    ok = srv.submit(LMRequest(prompt=np.asarray([5, 9, 2]), max_tokens=4))
+    res_bad, res_ok = bad.result(), ok.result()
+    assert res_bad.status == "error" and res_bad.value is None
+    assert "max_len" in res_bad.error
+    assert res_ok.ok and len(res_ok.value) == 4
+    assert srv.metrics().errors == 1
+    assert not any(eng.active_mask()) and not eng.sched.queue
+
+
+def test_overflowing_request_engine_direct_raises():
+    cfg, params = _setup()
+    eng = ServingEngine(params, cfg, batch_slots=1, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(rid=0, prompt=np.arange(1, 7), max_tokens=8))
+
+
+@pytest.mark.parametrize("admit", ["_admit_one", "_admit_one_unfolded"])
+def test_at_capacity_request_still_admits(admit):
+    """Exactly prompt + max_tokens == max_len is servable — both folded
+    and unfolded admission paths fill the cache to the brim correctly."""
+    cfg, params = _setup(2)
+    prompt = [4, 1, 7, 2]
+    want = _reference_generate(params, cfg, prompt, 4)
+    eng = ServingEngine(params, cfg, batch_slots=1, max_len=8)
+    assert eng.validate(Request(rid=0, prompt=np.asarray(prompt),
+                                max_tokens=4)) is None
+    req = Request(rid=0, prompt=np.asarray(prompt, np.int32), max_tokens=4)
+    getattr(eng, admit)(0, req)
+    eng.sched.slots[0] = req
+    for _ in range(4):
+        eng.step()
+    assert req.out_tokens == want
+
+
+def test_sliding_window_keeps_intentional_wrap():
+    """SWA configs ring-wrap by design: validation must not reject them."""
+    cfg, params = _setup(3)
+    cfg = dataclasses.replace(cfg, window=8)
+    eng = ServingEngine(params, cfg, batch_slots=1, max_len=16)
+    long_req = LMRequest(prompt=np.asarray([3, 1, 4]), max_tokens=32)
+    assert eng.validate(long_req) is None
+    res = Server(eng).submit(long_req).result()
+    assert res.ok and len(res.value) == 32
+
+
+def test_paged_rejects_window_config():
+    cfg, params = _setup()
+    cfg = dataclasses.replace(cfg, window=8)
+    with pytest.raises(ValueError, match="sliding-window"):
+        ServingEngine(params, cfg, batch_slots=1, max_len=16,
+                      kv_layout="paged")
+
+
+def test_paged_rejects_request_larger_than_partition():
+    cfg, params = _setup()
+    eng = ServingEngine(params, cfg, batch_slots=2, max_len=32,
+                        kv_layout="paged", kv_block=4, kv_blocks=4)
+    err = eng.validate(Request(rid=0, prompt=np.arange(1, 12),
+                               max_tokens=16))
+    assert err is not None and "arena partition" in err
+
+
+# ---------------------------------------------------------------------------
+# stale-KV isolation (slot reuse after mid-flight release)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_slot_reuse_after_release_never_attends_stale_kv(kv_layout):
+    """Cancel a request mid-flight, admit another into the same slot: its
+    output must equal a fresh engine's.  Pins the isolation argument:
+    ``_reset_slot`` zeroes only pos, but attention validity is the prefix
+    ``< pos + 1`` (dense) / the lane's own block table (paged), so the
+    previous tenant's keys are unreachable."""
+    cfg, params = _setup(4)
+    kw = {"kv_block": 4} if kv_layout == "paged" else {}
+    prompt_b, budget_b = [6, 2, 8], 6
+
+    fresh = _serve_all(ServingEngine(params, cfg, batch_slots=1,
+                                     max_len=32, kv_layout=kv_layout, **kw),
+                       [prompt_b], [budget_b])[0]
+
+    eng = ServingEngine(params, cfg, batch_slots=1, max_len=32,
+                        kv_layout=kv_layout, **kw)
+    srv = Server(eng)
+    vic = srv.submit(LMRequest(prompt=np.asarray([9, 9, 9, 9, 9]),
+                               max_tokens=20))
+    for _ in range(4):          # fill slot 0's cache with victim KV
+        srv.step()
+    assert vic.cancel()
+    res = srv.submit(LMRequest(prompt=np.asarray(prompt_b),
+                               max_tokens=budget_b)).result()
+    assert res.ok and res.value == fresh
+
+
+# ---------------------------------------------------------------------------
+# allocator properties
+# ---------------------------------------------------------------------------
+
+def _check_alloc_invariants(sched: SlotScheduler, kv_blocks, kv_groups):
+    per = kv_blocks // kv_groups
+    held = [b for blocks in sched.slot_blocks for b in blocks]
+    assert len(held) == len(set(held)), "block double-assigned"
+    free = [b for g in range(kv_groups) for b in sched._free[g]]
+    assert sorted(held + free) == list(range(kv_blocks)), \
+        "blocks leaked or invented"
+    for slot, blocks in enumerate(sched.slot_blocks):
+        g = sched.group_of(slot)
+        assert all(g * per <= b < (g + 1) * per for b in blocks), \
+            f"slot {slot} holds blocks outside partition {g}"
+
+
+@pytest.mark.parametrize("kv_groups", [1, 2, 4])
+def test_allocator_random_sequences_never_leak(kv_groups):
+    rng = random.Random(kv_groups)
+    n_slots, kv_blocks = 8, 32
+    sched = SlotScheduler(n_slots, kv_blocks=kv_blocks, kv_groups=kv_groups)
+    rid = 0
+    for _ in range(400):
+        op = rng.choice(["submit", "admit", "grow", "retire", "release",
+                         "cancel"])
+        if op == "submit":
+            sched.submit(Request(rid=rid, prompt=np.asarray([1])))
+            rid += 1
+        elif op == "admit":
+            sched.admit(lambda s, r: None,
+                        need_fn=lambda r: rng.randint(1, 3))
+        elif op == "grow":
+            occupied = [s for s in range(n_slots)
+                        if sched.slots[s] is not None]
+            if occupied:
+                sched.grow_block(rng.choice(occupied))
+        elif op in ("retire", "release"):
+            occupied = [s for s in range(n_slots)
+                        if sched.slots[s] is not None]
+            if occupied:
+                s = rng.choice(occupied)
+                if op == "retire":
+                    sched.retire(s, sched.slots[s].rid)
+                else:
+                    sched.release(s)
+        elif op == "cancel" and sched.queue:
+            sched.cancel_queued(rng.choice(sched.queue))
+        _check_alloc_invariants(sched, kv_blocks, kv_groups)
+    # drain: retire everything -> every block back on a free list
+    for s in range(n_slots):
+        if sched.slots[s] is not None:
+            sched.retire(s, sched.slots[s].rid)
+    sched.queue.clear()
+    assert sched.free_blocks() == kv_blocks
+    _check_alloc_invariants(sched, kv_blocks, kv_groups)
+
+
+def test_allocator_admission_head_of_line_blocking():
+    """When the queue head cannot fit, admission stops — smaller later
+    requests must not starve it."""
+    sched = SlotScheduler(2, kv_blocks=4, kv_groups=1)
+    big = Request(rid=0, prompt=np.asarray([1]))
+    small = Request(rid=1, prompt=np.asarray([1]))
+    sched.submit(big)
+    sched.submit(small)
+    needs = {id(big): 5, id(small): 1}   # big can never fit (4-block arena)
+    admitted = sched.admit(lambda s, r: None,
+                           need_fn=lambda r: needs[id(r)])
+    assert admitted == [] and sched.queue == [big, small]
+
+
+def test_allocator_partition_exhaustion_and_grow():
+    sched = SlotScheduler(2, kv_blocks=4, kv_groups=2)   # 2 blocks/group
+    a = Request(rid=0, prompt=np.asarray([1]))
+    sched.submit(a)
+    assert sched.admit(lambda s, r: None, need_fn=lambda r: 1) == [0]
+    assert sched.grow_block(0) is not None
+    assert sched.grow_block(0) is None          # partition 0 dry
+    assert sched.free_blocks(1) == 2            # partition 1 untouched
+    sched.release(0)
+    assert sched.free_blocks(0) == 2            # reclaimed

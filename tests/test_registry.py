@@ -46,6 +46,16 @@ def _decode_attn_args(rng):
     return (q, k, v, n_valid), {"groups": G}
 
 
+def _paged_decode_attn_args(rng):
+    B, N, bs, Kv, G, D = 2, 16, 8, 2, 3, 16      # non-contiguous tables
+    q = jnp.asarray(rng.standard_normal((B, Kv * G, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((N, bs, Kv, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((N, bs, Kv, D)).astype(np.float32))
+    tables = jnp.asarray([[3, 7, 1], [12, 0, 5]], jnp.int32)
+    n_valid = jnp.asarray([5, 20], jnp.int32)    # ragged vs nb*bs = 24
+    return (q, k, v, tables, n_valid), {"groups": G}
+
+
 def _mismatch_bits_args(rng):
     r1 = jnp.asarray(rng.integers(0, 4, (41,)), jnp.int32)
     r2 = jnp.asarray(rng.integers(0, 4, (29,)), jnp.int32)
@@ -66,6 +76,7 @@ _CASES = {
     "masked_logsumexp": _masked_logsumexp_args,
     "beam_merge_topk": _beam_merge_topk_args,
     "decode_attn": _decode_attn_args,
+    "paged_decode_attn": _paged_decode_attn_args,
     "mismatch_bits": _mismatch_bits_args,
 }
 

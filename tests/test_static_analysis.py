@@ -62,6 +62,7 @@ def test_repo_serving_traces_clean(meshed_cases):
     """Every trace rule is silent on the shipped serving traces."""
     cases = ti.build_pipeline_cases("guppy", None) + list(meshed_cases)
     cases.append(ti.build_lm_engine_case(None))
+    cases.append(ti.build_paged_lm_engine_case(None))
     for case in cases:
         for name, rule in ti.TRACE_RULES.items():
             assert rule(case) == [], (case.name, name)
