@@ -6,48 +6,78 @@ Also times the serving DNN both ways — repack-per-call (weights
 re-quantized inside every jitted forward) vs the quantize-once
 ``PackedParams`` artifact — so the pack-once win is measured, not
 asserted (``run.py --packed/--no-packed``).
+
+Persistent-kernel rows (``fig9/fused_*``): each hot stage measured on
+BOTH its per-step/per-frame path and the persistent fused kernel that
+replaced it (``gru_seq`` whole-layer walk, ``beam_merge_multiframe``
+F-frame strips), alongside the static kernel-launch count each trace
+compiles to (``repro.analysis.jaxpr_tools.kernel_launch_count``) — the
+quantity the persistent kernels exist to shrink.
+
+The beam-search stage routes through the registry default backend, so
+``run.py --backend`` (or running standalone with ``--backend``) selects
+the implementation for every stage; nothing is pinned to ``ref``.
+
+Standalone: ``PYTHONPATH=src python benchmarks/fig9_breakdown.py
+[--smoke] [--backend B] [--no-packed]``.
 """
+import argparse
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.jaxpr_tools import kernel_launch_count
 from repro.core import ctc as ctc_lib
 from repro.core import voting
 from repro.core.quant import QuantConfig
 from repro.data import genome
+from repro.kernels import registry
 from repro.kernels.registry import Backend
 from repro.models import basecaller as bc
-from ._util import time_call
+
+try:
+    from ._util import emit, time_call
+except ImportError:      # standalone: python benchmarks/fig9_breakdown.py
+    from _util import emit, time_call
 
 B = 8
+STRIP = 8      # frames per persistent beam strip (pipeline default)
 
 
-def run(packed: bool = True):
+def _launches(fn, *args) -> int:
+    """Static Pallas-launch count of one call of ``fn`` (0 on "ref")."""
+    return kernel_launch_count(jax.make_jaxpr(fn)(*args))
+
+
+def run(packed: bool = True, smoke: bool = False):
+    b = 4 if smoke else B
+    iters = 2 if smoke else 5
     cfg = bc.tiny_preset("guppy").with_quant(
         QuantConfig(enabled=True, bits_w=5, bits_a=5))
     params = bc.init_basecaller(jax.random.PRNGKey(0), cfg)
     dcfg = genome.SignalConfig(window=cfg.input_len, max_label_len=48)
-    batch = genome.sample_batch(jax.random.PRNGKey(1), B, dcfg)
+    batch = genome.sample_batch(jax.random.PRNGKey(1), b, dcfg)
 
     dnn = jax.jit(lambda p, s: bc.apply_basecaller(p, s, cfg))
     lp = dnn(params, batch["signal"])
-    t_dnn = time_call(dnn, params, batch["signal"])
+    t_dnn = time_call(dnn, params, batch["signal"], iters=iters)
 
-    # the serving decoder (hash-merge; compiled merge path — see fig26)
+    # the serving decoder (hash-merge, persistent F-frame strips); the
+    # backend comes from the registry default so --backend reaches it
     beam = jax.jit(functools.partial(ctc_lib.ctc_beam_search_hash_batch,
                                      beam_width=10, max_len=48,
-                                     backend="ref"))
+                                     strip_frames=STRIP))
     reads, lens, _ = beam(lp)
-    t_ctc = time_call(beam, lp)
+    t_ctc = time_call(beam, lp, iters=iters)
 
     top = reads[:, 0]
     toplen = lens[:, 0]
-    grp = jnp.stack([top[: B // 2], top[B // 2:]], axis=1)   # 2-read coverage
-    grplen = jnp.stack([toplen[: B // 2], toplen[B // 2:]], axis=1)
+    grp = jnp.stack([top[: b // 2], top[b // 2:]], axis=1)   # 2-read coverage
+    grplen = jnp.stack([toplen[: b // 2], toplen[b // 2:]], axis=1)
     vote = jax.jit(functools.partial(voting.vote_batch, span=96))
     vote(grp, grplen)
-    t_vote = time_call(vote, grp, grplen)
+    t_vote = time_call(vote, grp, grplen, iters=iters)
 
     total = t_dnn + t_ctc + t_vote
     rows = [
@@ -58,8 +88,41 @@ def run(packed: bool = True):
          f"{100*(t_ctc+t_vote)/total:.1f}% (paper 53.7%)"),
     ]
 
+    # --- persistent kernels vs the per-step/per-frame paths they replace,
+    # on the serving backend, with static launch counts -------------------
+    be = Backend("auto")    # "auto" follows set_default_backend(--backend)
+    fwd_fused = jax.jit(
+        lambda p, s: bc.apply_basecaller(p, s, cfg, be, fused_rnn=True))
+    fwd_step = jax.jit(
+        lambda p, s: bc.apply_basecaller(p, s, cfg, be, fused_rnn=False))
+    t_ff = time_call(fwd_fused, params, batch["signal"], iters=iters)
+    t_fs = time_call(fwd_step, params, batch["signal"], iters=iters)
+    l_ff = _launches(fwd_fused, params, batch["signal"])
+    l_fs = _launches(fwd_step, params, batch["signal"])
+    rows.append(("fig9/fused_dnn/per_step", t_fs,
+                 f"launches={l_fs} (gru_cell under lax.scan)"))
+    rows.append(("fig9/fused_dnn/persistent", t_ff,
+                 f"launches={l_ff} ({t_fs/t_ff:.2f}x vs per-step, "
+                 f"{l_fs/max(l_ff, 1):.0f}x fewer launches; gru_seq)"))
+
+    dec_frame = jax.jit(functools.partial(
+        ctc_lib.ctc_beam_search_hash_batch, beam_width=10, max_len=48))
+    dec_strip = jax.jit(functools.partial(
+        ctc_lib.ctc_beam_search_hash_batch, beam_width=10, max_len=48,
+        strip_frames=STRIP))
+    dec_frame(lp)
+    t_df = time_call(dec_frame, lp, iters=iters)
+    t_ds = time_call(dec_strip, lp, iters=iters)
+    l_df = _launches(dec_frame, lp)
+    l_ds = _launches(dec_strip, lp)
+    rows.append(("fig9/fused_decode/per_frame", t_df,
+                 f"launches={l_df} (beam_merge_topk per frame)"))
+    rows.append(("fig9/fused_decode/strip", t_ds,
+                 f"launches={l_ds} ({t_df/t_ds:.2f}x vs per-frame, "
+                 f"{l_df/max(l_ds, 1):.0f}x fewer launches; "
+                 f"beam_merge_multiframe F={STRIP})"))
+
     # serving DNN: repack-per-call vs the quantize-once artifact (PR 3)
-    be = Backend("auto")
     serve = jax.jit(lambda p, s: bc.apply_basecaller(p, s, cfg, backend=be))
     serve(params, batch["signal"])
     t_repack = time_call(serve, params, batch["signal"], iters=15)
@@ -73,3 +136,22 @@ def run(packed: bool = True):
                      f"{t_repack / t_packed:.2f}x vs repack "
                      "(PackedParams, quantize-once)"))
     return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller batch / fewer timing iters (CI)")
+    ap.add_argument("--backend", default="auto",
+                    choices=list(registry.BACKENDS),
+                    help="kernel backend for every stage (registry-wide)")
+    ap.add_argument("--no-packed", dest="packed", action="store_false",
+                    default=True)
+    args = ap.parse_args()
+    registry.set_default_backend(args.backend)
+    print("name,us_per_call,derived")
+    emit(run(packed=args.packed, smoke=args.smoke))
+
+
+if __name__ == "__main__":
+    main()

@@ -27,8 +27,55 @@ def load_cells(mesh="pod1"):
     return cells
 
 
+def _launch_rows():
+    """Static kernel-launch counts of the serving traces, fused vs the
+    per-step/per-frame paths they replace — the launch-overhead axis of
+    the roofline (each launch pays fixed dispatch cost regardless of
+    arithmetic intensity).  Counted on the tiny preset; the ratio is
+    shape-independent (one launch per layer/direction vs one per step)."""
+    import functools
+
+    import jax
+
+    from repro.analysis.jaxpr_tools import kernel_launch_count
+    from repro.core import ctc as ctc_lib
+    from repro.core.quant import QuantConfig
+    from repro.kernels.registry import Backend
+    from repro.models import basecaller as bc
+
+    cfg = bc.tiny_preset("guppy").with_quant(
+        QuantConfig(enabled=True, bits_w=5, bits_a=5))
+    params = bc.init_basecaller(jax.random.PRNGKey(0), cfg)
+    sig = jax.numpy.zeros((2, cfg.input_len, 1))
+    be = Backend("interpret")   # kernel bodies present off-TPU too
+
+    def count(fn, *args):
+        return kernel_launch_count(jax.make_jaxpr(fn)(*args))
+
+    l_step = count(functools.partial(
+        bc.apply_basecaller, cfg=cfg, backend=be, fused_rnn=False),
+        params, sig)
+    l_seq = count(functools.partial(
+        bc.apply_basecaller, cfg=cfg, backend=be, fused_rnn=True),
+        params, sig)
+    lp = jax.numpy.zeros((2, 24, cfg.n_classes))
+    dec = functools.partial(ctc_lib.ctc_beam_search_hash_batch,
+                            beam_width=5, max_len=16, backend="interpret")
+    l_frame = count(dec, lp)
+    l_strip = count(functools.partial(dec, strip_frames=8), lp)
+    return [
+        ("roofline/launches/dnn", "-",
+         f"per_step={l_step} persistent={l_seq} "
+         f"({l_step/max(l_seq, 1):.0f}x fewer; gru_seq)"),
+        ("roofline/launches/ctc_decode", "-",
+         f"per_frame={l_frame} strip={l_strip} "
+         f"({l_frame/max(l_strip, 1):.0f}x fewer; "
+         "beam_merge_multiframe F=8)"),
+    ]
+
+
 def run():
-    rows = []
+    rows = _launch_rows()
     for mesh in ("pod1", "pod2"):
         cells = load_cells(mesh)
         n_ok = sum(c["status"] == "ok" for c in cells)

@@ -47,7 +47,8 @@ def main() -> None:
     suites = [
         ("table3", table3_models.run),
         ("fig7", fig7_quant_throughput.run),
-        ("fig9", lambda: fig9_breakdown.run(packed=args.packed)),
+        ("fig9", lambda: fig9_breakdown.run(packed=args.packed,
+                                            smoke=args.quick)),
         ("fig21", (lambda: fig21_seat.run(steps=40)) if args.quick
          else fig21_seat.run),
         ("fig24", fig24_pim.run),

@@ -307,6 +307,35 @@ def host_transfer_eqns(jaxpr: Any) -> List[Any]:
             if e.primitive.name in HOST_TRANSFER_PRIMS]
 
 
+def kernel_launch_count(jaxpr: Any) -> int:
+    """Static count of Pallas kernel launches one execution performs.
+
+    Walks the trace multiplying each ``pallas_call`` by the trip counts
+    of the ``scan`` loops enclosing it (``eqn.params["length"]``) — the
+    number the persistent kernels exist to shrink: a per-step op under a
+    T-step scan counts T launches, the fused walk counts 1.  ``cond``
+    branches count as the worst case (max over branches); ``while`` trip
+    counts are unknowable statically and count as 1 iteration (none of
+    the serving traces here put kernels under ``while``).
+    """
+    total = 0
+    for eqn in as_jaxpr(jaxpr).eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+            continue
+        mult = 1
+        if eqn.primitive.name == "scan":
+            mult = int(eqn.params.get("length", 1))
+        subs = sub_closed_jaxprs(eqn)
+        if not subs:
+            continue
+        inner = (max(kernel_launch_count(s) for s in subs)
+                 if eqn.primitive.name == "cond"
+                 else sum(kernel_launch_count(s) for s in subs))
+        total += mult * inner
+    return total
+
+
 def describe_eqn(eqn: Any) -> str:
     """Short human string for findings: primitive + dtypes + scope."""
     outs = ", ".join(str(_var_dtype(v)) for v in eqn.outvars)

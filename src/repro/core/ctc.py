@@ -294,7 +294,8 @@ def prefix_hash_extend(h: jnp.ndarray, sym: jnp.ndarray) -> jnp.ndarray:
 
 def ctc_beam_search_hash_batch(log_probs, beam_width: int = 10,
                                blank: int = -1, max_len: int | None = None,
-                               logit_lengths=None, backend=None
+                               logit_lengths=None, backend=None,
+                               strip_frames: int | None = None
                                ) -> Tuple[jnp.ndarray, jnp.ndarray,
                                           jnp.ndarray]:
     """Batched hash-merge prefix beam search over (B, T, A) log-probs.
@@ -306,6 +307,14 @@ def ctc_beam_search_hash_batch(log_probs, beam_width: int = 10,
 
     ``backend`` is a registry backend name or ``repro.kernels.registry
     .Backend`` ("auto"/"pallas"/"interpret"/"ref") for the fused op.
+
+    ``strip_frames`` > 1 switches the per-frame ``beam_merge_topk`` loop
+    to the persistent ``beam_merge_multiframe`` kernel: beam state stays
+    resident in VMEM across strips of that many frames (one launch per
+    strip instead of one per frame), and prefixes are rebuilt from the
+    kernel's per-frame winner indices by an index-only replay scan.  The
+    result is bitwise identical to the per-frame path (``None``/``1``),
+    which remains the differential oracle.
 
     Returns (prefixes (B, W, max_len) padded -1, lengths (B, W),
     scores (B, W)), each example sorted by score descending.
@@ -326,6 +335,10 @@ def ctc_beam_search_hash_batch(log_probs, beam_width: int = 10,
     L = max_len
 
     mode = backend.mode if isinstance(backend, _registry.Backend) else backend
+    if strip_frames is not None and strip_frames > 1:
+        return _hash_beam_strips(log_probs, logit_lengths, mode,
+                                 W=W, blank=blank, L=L,
+                                 F=int(strip_frames))
     merge_topk = _registry.get_op("beam_merge_topk", mode)
 
     prefixes = jnp.full((B, W, L), -1, jnp.int32)
@@ -413,18 +426,103 @@ def ctc_beam_search_hash_batch(log_probs, beam_width: int = 10,
             jnp.take_along_axis(score, order, axis=1))
 
 
+def _hash_beam_strips(log_probs, logit_lengths, mode, *, W: int, blank: int,
+                      L: int, F: int):
+    """Strip-mode body of ``ctc_beam_search_hash_batch``.
+
+    One ``beam_merge_multiframe`` launch advances the narrow beam state
+    (hashes / log-masses / last symbol / lengths) through F frames with
+    the state resident in VMEM; prefix CONTENT — too wide to keep
+    resident — is rebuilt afterwards by replaying the per-frame winner
+    indices, an index-only gather/scatter scan with no float math, so the
+    final (prefixes, lengths, scores) are bitwise the per-frame path's.
+
+    The frame axis is zero-padded up to a multiple of F; padded frames
+    are inactive for every example (``active`` masks on the TRUE lengths)
+    and the kernel emits identity indices for them, which makes the
+    replay a natural no-op there too.
+    """
+    from repro.kernels import registry as _registry
+
+    B, T, A = log_probs.shape
+    nsym = A - 1
+    sym_ids = jnp.array([c for c in range(A) if c != blank], jnp.int32)
+    strip_op = _registry.get_op("beam_merge_multiframe", mode)
+
+    S = -(-T // F)
+    Tp = S * F
+    lps = jnp.pad(log_probs.astype(jnp.float32),
+                  ((0, 0), (0, Tp - T), (0, 0)))
+    active = (jnp.arange(Tp)[None, :]
+              < logit_lengths[:, None]).astype(jnp.int32)     # (B, Tp)
+
+    prefixes = jnp.full((B, W, L), -1, jnp.int32)
+    lengths = jnp.zeros((B, W), jnp.int32)
+    keys = jnp.zeros((B, W), jnp.int32)   # uint32 hash bit patterns
+    last = jnp.full((B, W), -1, jnp.int32)
+    p_b = jnp.full((B, W), NEG).at[:, 0].set(0.0)
+    p_nb = jnp.full((B, W), NEG)
+
+    bi = jnp.arange(B)[:, None]
+    wi = jnp.arange(W)[None, :]
+
+    def replay(st, idx_f):
+        """One frame of prefix reconstruction from winner indices.
+
+        idx < W is a stay of beam ``idx``; idx >= W is beam
+        ``(idx-W)//nsym`` extended by symbol ``sym_ids[(idx-W)%nsym]`` —
+        the per-frame decoder's candidate layout.
+        """
+        prefixes, lengths = st
+        is_ext = idx_f >= W                                   # (B, W)
+        src = jnp.where(is_ext, (idx_f - W) // nsym, idx_f)
+        sym = jnp.take(sym_ids, jnp.where(is_ext, (idx_f - W) % nsym, 0))
+        prev_prefix = jnp.take_along_axis(prefixes, src[:, :, None], axis=1)
+        prev_len = jnp.take_along_axis(lengths, src, axis=1)
+        widx = jnp.minimum(prev_len, L - 1)
+        cur = prev_prefix[bi, wi, widx]
+        newp = prev_prefix.at[bi, wi, widx].set(
+            jnp.where(is_ext, sym, cur))
+        newl = jnp.where(is_ext, jnp.minimum(prev_len + 1, L), prev_len)
+        return (newp, newl), None
+
+    def strip_step(state, inp):
+        prefixes, lengths, keys, last, p_b, p_nb = state
+        lp_strip, act_strip = inp                 # (B, F, A), (B, F)
+        idx, keys, p_b, p_nb, last, _lens = strip_op(
+            lp_strip, act_strip, keys, p_b, p_nb, last, lengths,
+            blank=blank, L=L)
+        # lengths from the replay are provably the kernel's ``_lens``
+        (prefixes, lengths), _ = jax.lax.scan(
+            replay, (prefixes, lengths), jnp.moveaxis(idx, 1, 0))
+        return (prefixes, lengths, keys, last, p_b, p_nb), None
+
+    xs = (jnp.moveaxis(lps.reshape(B, S, F, A), 1, 0),
+          jnp.moveaxis(active.reshape(B, S, F), 1, 0))
+    (prefixes, lengths, keys, last, p_b, p_nb), _ = jax.lax.scan(
+        strip_step, (prefixes, lengths, keys, last, p_b, p_nb), xs)
+
+    score = _lse2(p_b, p_nb)
+    order = jnp.argsort(-score, axis=1)
+    return (jnp.take_along_axis(prefixes, order[:, :, None], axis=1),
+            jnp.take_along_axis(lengths, order, axis=1),
+            jnp.take_along_axis(score, order, axis=1))
+
+
 def ctc_beam_search_hash(log_probs, beam_width: int = 10, blank: int = -1,
                          max_len: int | None = None, logit_length=None,
-                         backend=None
+                         backend=None, strip_frames: int | None = None
                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Hash-merge beam search over a single (T, A) example.
 
     Same contract as ``ctc_beam_search`` (the dense-merge oracle), decoded
-    on the fused ``beam_merge_topk`` registry op.
+    on the fused ``beam_merge_topk`` registry op (or the persistent
+    ``beam_merge_multiframe`` strips when ``strip_frames`` > 1).
     """
     ll = None if logit_length is None else jnp.asarray(
         logit_length, jnp.int32).reshape(1)
     prefixes, lengths, scores = ctc_beam_search_hash_batch(
         log_probs[None], beam_width=beam_width, blank=blank,
-        max_len=max_len, logit_lengths=ll, backend=backend)
+        max_len=max_len, logit_lengths=ll, backend=backend,
+        strip_frames=strip_frames)
     return prefixes[0], lengths[0], scores[0]

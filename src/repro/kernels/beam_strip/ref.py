@@ -1,0 +1,109 @@
+"""Pure-jnp oracle for the persistent multi-frame beam-merge kernel.
+
+One strip = F consecutive CTC frames advanced through the hash beam
+update.  The oracle is literally the per-frame serving decoder's inner
+loop (``core.ctc.ctc_beam_search_hash_batch``) restricted to the state
+the kernel carries — hashes, blank/non-blank log-masses, last symbol,
+prefix length — scanned over the strip with ``beam_merge_topk_ref`` as
+the per-frame merge.  Prefix CONTENT is not part of the op: the caller
+replays the emitted ``idx`` trace to reconstruct prefixes (see
+``core.ctc``), which keeps the kernel state narrow enough to stay
+resident in VMEM.
+
+Key identity: hashes live as int32 here (bitcast from the decoder's
+uint32).  Two's-complement wrapping multiply-add is bit-identical to the
+uint32 rolling hash ``h' = h * 2654435761 + (sym + 1) (mod 2^32)``, so
+merges (pure equality tests) agree bitwise with the per-frame path.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ctc_merge.ref import beam_merge_topk_ref
+
+NEG = -1.0e9
+# 2654435761 (Knuth's odd multiplicative constant, cf. core.ctc._HASH_MUL)
+# viewed as a two's-complement int32 — wrapping i32 arithmetic with this
+# constant is bitwise the uint32 rolling hash.  A plain Python int (weakly
+# typed) so the Pallas kernel body can close over it without capturing a
+# traced constant.
+_MUL_I32 = -1640531535
+
+
+def beam_merge_multiframe_ref(lp, active, keys, pb, pnb, last, lengths,
+                              *, blank: int, L: int):
+    """Advance the hash beam state through a strip of F frames.
+
+    Args:
+      lp: (B, F, A) f32 per-frame log-probabilities.
+      active: (B, F) int32; 0 marks a padded frame (state untouched,
+        identity ``idx`` emitted).
+      keys: (B, W) int32 rolling prefix hashes (uint32 bit patterns).
+      pb/pnb: (B, W) f32 blank / non-blank log-mass per beam.
+      last: (B, W) int32 last symbol per beam (-1 = empty prefix).
+      lengths: (B, W) int32 prefix lengths.
+      blank: blank symbol id (static, non-negative).
+      L: max prefix length (static).
+
+    Returns ``(idx, keys, pb, pnb, last, lengths)`` where ``idx`` is
+    (B, F, W) int32 — per frame, the winning candidate index in the
+    per-frame decoder's candidate layout (stays ``[0, W)``, then extends
+    ``W + w*nsym + j``) — and the rest is the post-strip state.
+    """
+    B, F, A = lp.shape
+    W = keys.shape[1]
+    nsym = A - 1
+    sym_ids = jnp.array([c for c in range(A) if c != blank], jnp.int32)
+
+    def step(state, inp):
+        keys, pb, pnb, last, lens = state
+        lp_f, act_f = inp                              # (B, A), (B,)
+        tot = jnp.logaddexp(pb, pnb)
+
+        # --- stay candidates (prefix unchanged) --------------------------
+        stay_pb = tot + lp_f[:, blank][:, None]
+        stay_pnb = jnp.where(
+            lens > 0,
+            pnb + jnp.take_along_axis(lp_f, jnp.maximum(last, 0), axis=1),
+            NEG)
+
+        # --- extend candidates (append symbol c) -------------------------
+        lp_sym = lp_f[:, sym_ids]                      # (B, nsym)
+        is_rep = last[:, :, None] == sym_ids[None, None, :]
+        ext_pnb = (jnp.where(is_rep, pb[:, :, None], tot[:, :, None])
+                   + lp_sym[:, None, :])               # (B, W, nsym)
+        ext_pnb = jnp.where((lens < L)[:, :, None], ext_pnb, NEG)
+        ext_key = keys[:, :, None] * _MUL_I32 + (sym_ids[None, None, :] + 1)
+        ext_last = jnp.broadcast_to(sym_ids[None, None, :], (B, W, nsym))
+        ext_len = jnp.broadcast_to(
+            jnp.minimum(lens + 1, L)[:, :, None], (B, W, nsym))
+
+        # --- candidates: stays first, then extends (row-major) -----------
+        cand_key = jnp.concatenate(
+            [keys, ext_key.reshape(B, W * nsym)], axis=1)
+        cand_pb = jnp.concatenate(
+            [stay_pb, jnp.full((B, W * nsym), NEG)], axis=1)
+        cand_pnb = jnp.concatenate(
+            [stay_pnb, ext_pnb.reshape(B, W * nsym)], axis=1)
+        cand_last = jnp.concatenate(
+            [last, ext_last.reshape(B, W * nsym)], axis=1)
+        cand_len = jnp.concatenate(
+            [lens, ext_len.reshape(B, W * nsym)], axis=1)
+
+        idx, mpb, mpnb = beam_merge_topk_ref(cand_key, cand_pb, cand_pnb,
+                                             W=W)
+        new = (jnp.take_along_axis(cand_key, idx, axis=1),
+               mpb, mpnb,
+               jnp.take_along_axis(cand_last, idx, axis=1),
+               jnp.take_along_axis(cand_len, idx, axis=1))
+        act = (act_f > 0)[:, None]
+        idx_out = jnp.where(act, idx,
+                            jnp.arange(W, dtype=jnp.int32)[None, :])
+        new = jax.tree_util.tree_map(lambda n, o: jnp.where(act, n, o),
+                                     new, state)
+        return new, idx_out
+
+    state0 = (keys, pb, pnb, last, lengths)
+    state, idx_seq = jax.lax.scan(
+        step, state0, (jnp.moveaxis(lp, 1, 0), jnp.moveaxis(active, 1, 0)))
+    keys, pb, pnb, last, lengths = state
+    return (jnp.moveaxis(idx_seq, 0, 1), keys, pb, pnb, last, lengths)

@@ -67,9 +67,14 @@ def ctc_merge_pallas(eq: jnp.ndarray, scores: jnp.ndarray,
 # fused hash-merge + top-k (the whole per-frame beam update in one kernel)
 # ---------------------------------------------------------------------------
 
-def _merge_topk_kernel(keys_ref, pb_ref, pnb_ref, idx_ref, opb_ref, opnb_ref):
-    """One batch row: merge duplicate candidates by key, rank by merged
-    score, emit the full descending order.
+def merge_rank_select(keys_row, pb_row, pnb_row):
+    """One batch row's fused beam update: merge duplicate candidates by
+    key, rank by merged score, emit the full descending order.
+
+    Shared in-kernel body of the per-frame ``beam_merge_topk`` kernel AND
+    the persistent multi-frame ``beam_merge_multiframe`` kernel
+    (kernels/beam_strip) — one implementation so the two stay bitwise
+    interchangeable by construction.
 
     Everything is dense (C x C) vector work — equality plane, two masked
     logsumexp reductions, a comparison-count ranking, and a one-hot
@@ -82,12 +87,11 @@ def _merge_topk_kernel(keys_ref, pb_ref, pnb_ref, idx_ref, opb_ref, opnb_ref):
     is a permutation of 0..C-1 (ties are broken by index, matching
     ``lax.top_k``), so emitting ``out[rank[i]] = i`` is a masked
     column-reduction instead of a sort network.
-    """
-    keys_row = keys_ref[...]                       # (1, C) int32
-    pb_row = pb_ref[...]                           # (1, C) f32
-    pnb_row = pnb_ref[...]
-    C = keys_row.shape[1]
 
+    Args: (1, C) rows — int32 keys, f32 blank / non-blank log-masses.
+    Returns (idx, merged_pb, merged_pnb), each (1, C), in rank order.
+    """
+    C = keys_row.shape[1]
     keys_col = jnp.reshape(keys_row, (C, 1))
     eq = keys_col == keys_row                      # (C, C): [i, j]
     ii = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
@@ -116,9 +120,19 @@ def _merge_topk_kernel(keys_ref, pb_ref, pnb_ref, idx_ref, opb_ref, opnb_ref):
 
     # out[0, r] = sum_i [rank[i] == r] * val[i]   (rank is a permutation)
     sel = rank_col == jj                           # (C, C): [i, r]
-    idx_ref[...] = jnp.sum(jnp.where(sel, ii, 0), axis=0, keepdims=True)
-    opb_ref[...] = jnp.sum(jnp.where(sel, mpb, 0.0), axis=0, keepdims=True)
-    opnb_ref[...] = jnp.sum(jnp.where(sel, mpnb, 0.0), axis=0, keepdims=True)
+    idx = jnp.sum(jnp.where(sel, ii, 0), axis=0, keepdims=True)
+    opb = jnp.sum(jnp.where(sel, mpb, 0.0), axis=0, keepdims=True)
+    opnb = jnp.sum(jnp.where(sel, mpnb, 0.0), axis=0, keepdims=True)
+    return idx, opb, opnb
+
+
+def _merge_topk_kernel(keys_ref, pb_ref, pnb_ref, idx_ref, opb_ref, opnb_ref):
+    """One batch row through ``merge_rank_select`` (see its docstring)."""
+    idx, opb, opnb = merge_rank_select(keys_ref[...], pb_ref[...],
+                                       pnb_ref[...])
+    idx_ref[...] = idx
+    opb_ref[...] = opb
+    opnb_ref[...] = opnb
 
 
 def beam_merge_topk_pallas(keys: jnp.ndarray, pb: jnp.ndarray,

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the persistent GRU sequence kernel.
+
+The oracle IS the per-step path: a ``lax.scan`` over the fused GRU cell's
+jnp oracle.  ``models.basecaller._run_rnn(fused_rnn=False)`` runs exactly
+this scan (through the ``gru_cell`` registry op), which is what makes the
+fused/unfused differential tests meaningful — same math, one launch.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gru_cell.ref import gru_cell_ref
+
+
+def gru_seq_ref(x_proj, h0, u, b):
+    """x_proj (T, B, 3H), h0 (B, H), u (H, 3H), b (3H,) -> ys (T, B, H).
+
+    ``ys[t]`` is the hidden state after consuming ``x_proj[t]`` (forward
+    time order; callers flip the sequence for reverse direction)."""
+    b2 = b.reshape(1, -1)
+
+    def step(h, xp):
+        hn = gru_cell_ref(xp, h, u, b2)
+        return hn, hn
+
+    _, ys = jax.lax.scan(step, h0, x_proj)
+    return ys

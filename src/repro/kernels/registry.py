@@ -44,6 +44,8 @@ BACKENDS = ("auto", "pallas", "interpret", "ref")
 _OP_MODULES = {
     "quant_matmul": "repro.kernels.quant_matmul.ops",
     "gru_cell": "repro.kernels.gru_cell.ops",
+    "gru_seq": "repro.kernels.gru_seq.ops",
+    "beam_merge_multiframe": "repro.kernels.beam_strip.ops",
     "masked_logsumexp": "repro.kernels.ctc_merge.ops",
     "beam_merge_topk": "repro.kernels.ctc_merge.ops",
     "decode_attn": "repro.kernels.decode_attn.ops",

@@ -306,13 +306,18 @@ def lstm_cell(state, x_proj, u, b, q: QuantConfig):
 
 
 def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool,
-             backend: Optional[Backend] = None):
+             backend: Optional[Backend] = None, fused_rnn: bool = True):
     """x: (B, T, F) -> (B, T, H). Input projection hoisted out of the scan.
 
     With a ``backend``, the input projection runs on the integer
-    ``quant_matmul`` op and the GRU hot loop on the fused ``gru_cell``
-    kernel (U stationary in VMEM); without one it is the differentiable
-    fake-quant training path.
+    ``quant_matmul`` op and the GRU hot loop on the persistent ``gru_seq``
+    kernel — the whole layer/direction walk in ONE launch, hidden state
+    and recurrent weights resident in VMEM across timesteps.
+    ``fused_rnn=False`` keeps the per-step ``gru_cell``-under-``lax.scan``
+    path (one launch per timestep), which serves as the differential
+    oracle for the persistent walk and the only serving path for LSTM;
+    both are bitwise identical per backend.  Without a backend it is the
+    differentiable fake-quant training path.
     """
     q = cfg.quant
     B, T, F = x.shape
@@ -332,8 +337,17 @@ def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool,
             # recurrent weights on the same b-bit grid the model trained
             # on (the fused kernel computes h @ u in fp — only the weight
             # quantization carries over; h itself stays fp per step)
-            fused = backend.op("gru_cell")
             u_q = fq_weight(layer["u"], q)
+            if fused_rnn:
+                # persistent walk: flip-run-flip is bitwise the
+                # reverse=True scan (same per-step math, same order)
+                xs = jnp.flip(x_proj, axis=0) if reverse else x_proj
+                ys = backend.op("gru_seq")(xs, jnp.zeros((B, h)), u_q,
+                                           layer["b"])
+                if reverse:
+                    ys = jnp.flip(ys, axis=0)
+                return jnp.swapaxes(ys, 0, 1)
+            fused = backend.op("gru_cell")
 
             def step(hs, xp):
                 hn = fused(xp, hs, u_q, layer["b"])
@@ -350,13 +364,16 @@ def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool,
 
 
 def apply_basecaller(params, signal, cfg: BasecallerConfig,
-                     backend: Optional[Backend] = None):
+                     backend: Optional[Backend] = None,
+                     fused_rnn: bool = True):
     """signal: (B, T, C) -> log-probs (B, T_out, n_classes).
 
     ``backend`` (a ``repro.kernels.registry.Backend``) switches the whole
     model onto the registry's accelerated serving path: integer
-    ``quant_matmul`` projections + the fused ``gru_cell`` kernel.  Leave it
-    None for training — the backend path carries no STE gradients.
+    ``quant_matmul`` projections + the persistent ``gru_seq`` walk (or the
+    per-step ``gru_cell`` scan with ``fused_rnn=False`` — the differential
+    oracle; see ``_run_rnn``).  Leave it None for training — the backend
+    path carries no STE gradients.
 
     Polymorphic over ``params``: a float checkpoint pytree quantizes
     weights in-trace (training, or the legacy repack-per-call serving
@@ -395,12 +412,15 @@ def apply_basecaller(params, signal, cfg: BasecallerConfig,
 
     for i, layer in enumerate(params["rnn"]):
         if cfg.rnn_direction == "bidi":
-            fwd = _run_rnn(x, layer, cfg, reverse=False, backend=backend)
-            bwd = _run_rnn(x, layer, cfg, reverse=True, backend=backend)
+            fwd = _run_rnn(x, layer, cfg, reverse=False, backend=backend,
+                           fused_rnn=fused_rnn)
+            bwd = _run_rnn(x, layer, cfg, reverse=True, backend=backend,
+                           fused_rnn=fused_rnn)
             x = jnp.concatenate([fwd, bwd], axis=-1)
         else:
             reverse = (cfg.rnn_direction == "alt") and (i % 2 == 1)
-            x = _run_rnn(x, layer, cfg, reverse=reverse, backend=backend)
+            x = _run_rnn(x, layer, cfg, reverse=reverse, backend=backend,
+                         fused_rnn=fused_rnn)
         x = _dp(x, f"rnn{i}")
 
     if backend is None:
@@ -428,7 +448,8 @@ def serving_stage_boundaries(cfg: BasecallerConfig) -> Tuple[str, ...]:
 
 def apply_basecaller_packed(packed: PackedParams, signal,
                             cfg: BasecallerConfig,
-                            backend: Optional[Backend] = None):
+                            backend: Optional[Backend] = None,
+                            fused_rnn: bool = True):
     """Serving forward over the quantize-once artifact (explicit-name
     alias of the polymorphic ``apply_basecaller``).  Serving only:
     requires a ``backend``; bitwise identical to the repack-per-call path
@@ -436,7 +457,8 @@ def apply_basecaller_packed(packed: PackedParams, signal,
     if not is_packed(packed):
         raise TypeError("apply_basecaller_packed wants PackedParams "
                         "(build one with pack_basecaller)")
-    return apply_basecaller(packed, signal, cfg, backend)
+    return apply_basecaller(packed, signal, cfg, backend,
+                            fused_rnn=fused_rnn)
 
 
 # ---------------------------------------------------------------------------

@@ -158,6 +158,9 @@ class BasecallPipeline:
         beam_width: CTC beam width (1 = greedy).
         max_read_len: decode pad length per window (default
             ``mcfg.output_len``).
+        decode_strip: frames per persistent ``beam_merge_multiframe``
+            launch in the hash beam decode (``None``/``1`` = the per-frame
+            ``beam_merge_topk`` oracle loop; results are bitwise equal).
         packed: serve from the quantize-once ``PackedParams`` artifact
             (False keeps the repack-per-call oracle path).
         params: optional float checkpoint to bind immediately.
@@ -176,6 +179,7 @@ class BasecallPipeline:
                  chunk: Optional[chunking.ChunkConfig] = None,
                  beam_width: int = 5,
                  max_read_len: Optional[int] = None,
+                 decode_strip: Optional[int] = 8,
                  packed: bool = True,
                  params=None):
         self.mcfg = mcfg
@@ -192,6 +196,7 @@ class BasecallPipeline:
                 f"{mcfg.input_len}")
         self.beam_width = beam_width
         self.max_read_len = max_read_len or mcfg.output_len
+        self.decode_strip = decode_strip
         self.packed = packed
         # id(float tree) -> (float tree, artifact); the strong ref pins the
         # id. Small FIFO so pipeline-default + engine/params= overrides of
@@ -355,6 +360,7 @@ class BasecallPipeline:
     def _build_decode_windows(self):
         mcfg, backend = self.mcfg, self.backend
         W, L = self.beam_width, self.max_read_len
+        strip = self.decode_strip
 
         @jax.jit
         def fn(params, windows, logit_lengths):
@@ -368,9 +374,12 @@ class BasecallPipeline:
                 logit_lengths = shd.constrain(logit_lengths, ("dp",))
             lps = bc.apply_basecaller(params, windows, mcfg, backend=backend)
             if W > 1:
+                with jax.named_scope("stage:beam_in"):
+                    lps = shd.constrain(lps, ("dp", None, None))
                 reads, lens, _ = ctc_lib.ctc_beam_search_hash_batch(
                     lps, beam_width=W, max_len=L,
-                    logit_lengths=logit_lengths, backend=backend)
+                    logit_lengths=logit_lengths, backend=backend,
+                    strip_frames=strip)
                 reads, lens = reads[:, 0], lens[:, 0]
             else:
                 reads, lens = jax.vmap(
@@ -398,6 +407,7 @@ class BasecallPipeline:
     def _build_windows_fused(self):
         mcfg, scfg, backend = self.mcfg, self.scfg, self.backend
         W = self.beam_width
+        strip = self.decode_strip
 
         @jax.jit
         def fn(params, signal):
@@ -409,9 +419,11 @@ class BasecallPipeline:
                 bc.apply_basecaller(params, v, mcfg, backend=backend)
                 for v in views])
             C, C_len = seat_lib.consensus_reads(lps, center, scfg)
+            with jax.named_scope("stage:beam_in"):
+                center_lps = shd.constrain(lps[center], ("dp", None, None))
             reads, lens, scores = ctc_lib.ctc_beam_search_hash_batch(
-                lps[center], beam_width=W, max_len=scfg.max_read_len,
-                backend=backend)
+                center_lps, beam_width=W, max_len=scfg.max_read_len,
+                backend=backend, strip_frames=strip)
             with jax.named_scope("stage:fused_out"):
                 return tuple(shd.replicate(t) for t in
                              (C, C_len, reads[:, 0], lens[:, 0],
@@ -427,15 +439,17 @@ class BasecallPipeline:
         ambient mesh (``stage:<name>`` scopes above + the model's own
         ``serving_stage_boundaries``); ``repro.analysis`` enforces this.
         """
-        return (("windows_in", "lengths_in")
-                + bc.serving_stage_boundaries(self.mcfg)
-                + ("reads_out", "lens_out"))
+        names = (("windows_in", "lengths_in")
+                 + bc.serving_stage_boundaries(self.mcfg))
+        if self.beam_width > 1:
+            names += ("beam_in",)
+        return names + ("reads_out", "lens_out")
 
     def fused_stage_boundaries(self) -> Tuple[str, ...]:
         """Stage boundaries of the fused SEAT-view serving trace."""
         return (("fused_signal_in",)
                 + bc.serving_stage_boundaries(self.mcfg)
-                + ("fused_out",))
+                + ("beam_in", "fused_out"))
 
     def window_logit_lengths(self, n_samples: int) -> np.ndarray:
         """(N,) decoder ``logit_lengths`` for one read's chunked windows."""

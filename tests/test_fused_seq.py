@@ -1,0 +1,180 @@
+"""Persistent-kernel differentials: ``gru_seq`` + ``beam_merge_multiframe``.
+
+Both persistent kernels must be BITWISE interchangeable with the per-step
+paths they replace, on every backend:
+
+  gru_seq                 ≡ lax.scan over the per-step ``gru_cell`` op
+  strip-mode hash decode  ≡ per-frame ``beam_merge_topk`` decode
+
+including ragged tails (batch not a tile multiple, ``logit_length`` <
+frames, frame count not a strip multiple), the golden read, and the
+dp-sharded 4-device mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ctc as ctc_lib
+from repro.dist import sharding as shd
+from repro.kernels import registry
+from repro.models import basecaller as bc
+
+jax.config.update("jax_platform_name", "cpu")
+
+BACKENDS = ("auto", "ref", "interpret")
+NEG = -1.0e9
+
+
+# ---------------------------------------------------------------------------
+# gru_seq: one persistent launch ≡ per-step scan
+# ---------------------------------------------------------------------------
+
+def _per_step_scan(xp, h0, u, b, backend):
+    cell = registry.get_op("gru_cell", backend)
+
+    def step(h, x):
+        hn = cell(x, h, u, b)
+        return hn, hn
+
+    _, ys = jax.lax.scan(step, h0, xp)
+    return ys
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), T=st.integers(1, 9),
+       B=st.integers(1, 30), H=st.sampled_from((8, 48)))
+def test_gru_seq_matches_per_step_scan(seed, T, B, H):
+    """The whole-layer walk must equal the per-step oracle bit for bit on
+    every backend (batch deliberately ragged vs the bb=128 tile)."""
+    rng = np.random.default_rng(seed)
+    xp = jnp.asarray(rng.standard_normal((T, B, 3 * H)).astype(np.float32))
+    h0 = jnp.asarray(rng.standard_normal((B, H)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((H, 3 * H)).astype(np.float32) * 0.3)
+    b = jnp.asarray(rng.standard_normal((3 * H,)).astype(np.float32) * 0.1)
+    for backend in BACKENDS:
+        want = _per_step_scan(xp, h0, u, b, backend)
+        got = registry.get_op("gru_seq", backend)(xp, h0, u, b)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"backend={backend}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_forward_matches_per_step_forward(backend):
+    """apply_basecaller(fused_rnn=True) ≡ fused_rnn=False bitwise, float
+    and packed params, forward AND reverse (alt-direction) layers."""
+    cfg = bc.tiny_preset().with_quant(
+        bc.QuantConfig(enabled=True, bits_w=5, bits_a=5))
+    params = bc.init_basecaller(jax.random.PRNGKey(0), cfg)
+    sig = jax.random.normal(jax.random.PRNGKey(1), (3, cfg.input_len, 1))
+    be = registry.Backend(backend)
+    base = bc.apply_basecaller(params, sig, cfg, be, fused_rnn=False)
+    fused = bc.apply_basecaller(params, sig, cfg, be, fused_rnn=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(base))
+    packed = bc.pack_basecaller(params, cfg)
+    pk0 = bc.apply_basecaller_packed(packed, sig, cfg, be, fused_rnn=False)
+    pk1 = bc.apply_basecaller_packed(packed, sig, cfg, be, fused_rnn=True)
+    np.testing.assert_array_equal(np.asarray(pk1), np.asarray(pk0))
+
+
+# ---------------------------------------------------------------------------
+# beam_merge_multiframe: strip decode ≡ per-frame decode
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), T=st.integers(1, 14),
+       W=st.integers(1, 6), F=st.sampled_from((2, 4, 8)))
+def test_strip_decode_matches_per_frame_decode(seed, T, W, F):
+    """Full decoder outputs (prefixes, lengths, scores) bitwise equal
+    between strip mode and the per-frame oracle on every backend —
+    including ragged tails (logit_length < T, T not a multiple of F)."""
+    rng = np.random.default_rng(seed)
+    B, A = 3, 5
+    lp = jax.nn.log_softmax(jnp.asarray(
+        rng.standard_normal((B, T, A)).astype(np.float32) * 2), axis=-1)
+    ll = jnp.asarray(rng.integers(0, T + 1, (B,)), jnp.int32)
+    want = ctc_lib.ctc_beam_search_hash_batch(
+        lp, beam_width=W, max_len=max(T // 2, 1), logit_lengths=ll,
+        backend="ref")
+    for backend in BACKENDS:
+        got = ctc_lib.ctc_beam_search_hash_batch(
+            lp, beam_width=W, max_len=max(T // 2, 1), logit_lengths=ll,
+            backend=backend, strip_frames=F)
+        for w, g, name in zip(want, got, ("prefixes", "lengths", "scores")):
+            np.testing.assert_array_equal(
+                np.asarray(w), np.asarray(g),
+                err_msg=f"backend={backend} F={F} {name}")
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_beam_merge_multiframe_op_backend_parity(seed):
+    """The raw op on arbitrary (not merely reachable) state: all six
+    outputs bitwise equal across backends."""
+    rng = np.random.default_rng(seed)
+    B, F, A, W, L = 2, 5, 5, 6, 9
+    lp = jax.nn.log_softmax(jnp.asarray(
+        rng.standard_normal((B, F, A)).astype(np.float32)), axis=-1)
+    active = jnp.asarray(rng.integers(0, 2, (B, F)), jnp.int32)
+    keys = jnp.asarray(rng.integers(-2**31, 2**31 - 1, (B, W)), jnp.int32)
+    pb = jnp.asarray(rng.standard_normal((B, W)).astype(np.float32) * 4)
+    pnb = jnp.asarray(rng.standard_normal((B, W)).astype(np.float32) * 4)
+    last = jnp.asarray(rng.integers(-1, A - 1, (B, W)), jnp.int32)
+    lengths = jnp.asarray(rng.integers(0, L + 1, (B, W)), jnp.int32)
+    want = registry.get_op("beam_merge_multiframe", "ref")(
+        lp, active, keys, pb, pnb, last, lengths, blank=A - 1, L=L)
+    for backend in ("interpret", "auto"):
+        got = registry.get_op("beam_merge_multiframe", backend)(
+            lp, active, keys, pb, pnb, last, lengths, blank=A - 1, L=L)
+        for w, g, name in zip(want, got,
+                              ("idx", "keys", "pb", "pnb", "last", "len")):
+            np.testing.assert_array_equal(
+                np.asarray(w), np.asarray(g),
+                err_msg=f"backend={backend} {name}")
+
+
+# ---------------------------------------------------------------------------
+# end to end: golden read + 4-device mesh
+# ---------------------------------------------------------------------------
+
+def test_golden_read_fused_equals_oracle_pipeline(golden_pipeline,
+                                                  golden_read):
+    """The golden read through the default (persistent-kernel) pipeline ≡
+    a per-frame (decode_strip=None) oracle pipeline, bit for bit."""
+    from repro.pipeline import BasecallPipeline
+
+    pipe, params, _ = golden_pipeline
+    seq, sig = golden_read
+    oracle = BasecallPipeline(pipe.mcfg, backend=pipe.backend,
+                              beam_width=pipe.beam_width, decode_strip=None,
+                              params=params)
+    got = pipe.basecall(sig)
+    want = oracle.basecall(sig)
+    assert got.length == want.length
+    np.testing.assert_array_equal(got.read, want.read)
+    np.testing.assert_array_equal(got.window_reads, want.window_reads)
+    np.testing.assert_array_equal(got.window_lengths, want.window_lengths)
+    # and the default pipeline still decodes the golden genome faithfully
+    assert got.length > 0
+
+
+@pytest.mark.parametrize("backend", ("ref", "interpret"))
+def test_strip_decode_mesh_parity(host_mesh4, backend):
+    """1-device ≡ 4-device dp mesh on the strip-decode serving path."""
+    from repro.pipeline import BasecallPipeline
+
+    pipe = BasecallPipeline.from_preset(
+        "guppy", scale="tiny",
+        quant=bc.QuantConfig(enabled=True, bits_w=5, bits_a=5),
+        backend=backend, beam_width=3, decode_strip=4)
+    pipe.init_params(jax.random.PRNGKey(2))
+    sig = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (700,)))
+    single = pipe.basecall(sig)
+    with shd.use_mesh(host_mesh4):
+        sharded = pipe.basecall(sig)
+    assert single.length == sharded.length
+    np.testing.assert_array_equal(single.read, sharded.read)
+    np.testing.assert_array_equal(single.window_reads, sharded.window_reads)
+    np.testing.assert_array_equal(single.window_lengths,
+                                  sharded.window_lengths)

@@ -70,11 +70,37 @@ def _beam_merge_topk_args(rng):
     return (keys, pb, pnb), {"W": 7}
 
 
+def _gru_seq_args(rng):
+    T, B, H = 7, 23, 48                          # ragged vs bb=128, odd T
+    xp = jnp.asarray(rng.standard_normal((T, B, 3 * H)).astype(np.float32))
+    h0 = jnp.asarray(rng.standard_normal((B, H)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((H, 3 * H)).astype(np.float32) * 0.1)
+    b = jnp.asarray(rng.standard_normal((3 * H,)).astype(np.float32) * 0.1)
+    return (xp, h0, u, b), {}
+
+
+def _beam_merge_multiframe_args(rng):
+    B, F, A, W, L = 2, 3, 5, 4, 11               # one padded (ragged) frame
+    NEG = -1.0e9
+    lp = jnp.asarray(np.log(
+        rng.dirichlet(np.ones(A), (B, F))).astype(np.float32))
+    active = jnp.asarray([[1, 1, 1], [1, 1, 0]], jnp.int32)
+    keys = jnp.zeros((B, W), jnp.int32)
+    pb = jnp.full((B, W), NEG, jnp.float32).at[:, 0].set(0.0)
+    pnb = jnp.full((B, W), NEG, jnp.float32)
+    last = jnp.full((B, W), -1, jnp.int32)
+    lengths = jnp.zeros((B, W), jnp.int32)
+    return ((lp, active, keys, pb, pnb, last, lengths),
+            {"blank": A - 1, "L": L})
+
+
 _CASES = {
     "quant_matmul": _quant_matmul_args,
     "gru_cell": _gru_cell_args,
+    "gru_seq": _gru_seq_args,
     "masked_logsumexp": _masked_logsumexp_args,
     "beam_merge_topk": _beam_merge_topk_args,
+    "beam_merge_multiframe": _beam_merge_multiframe_args,
     "decode_attn": _decode_attn_args,
     "paged_decode_attn": _paged_decode_attn_args,
     "mismatch_bits": _mismatch_bits_args,
