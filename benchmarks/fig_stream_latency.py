@@ -1,0 +1,144 @@
+"""Streaming basecalling latency: time-to-first-base, per-chunk step
+tails vs. pore count, and throughput recovered by adaptive ejection.
+
+Batch serving answers "how many reads per second"; the ReadUntil loop
+lives or dies on *responsiveness* — how quickly after a pore starts
+emitting does the caller see provisional bases (time-to-first-base), and
+how the per-step latency tail grows with concurrently streaming pores.
+The eject sweep measures the adaptive-sampling payoff itself: the wall
+clock to drain a pore pool as the fraction of ejectable (uninteresting)
+reads rises.
+
+    PYTHONPATH=src python benchmarks/fig_stream_latency.py --smoke
+    PYTHONPATH=src python benchmarks/fig_stream_latency.py \
+        --pores 4 16 64 --chunk 60
+
+Also runs inside the harness:
+``python -m benchmarks.run --only stream_latency``.
+"""
+import argparse
+import time
+
+import numpy as np
+
+
+def _build(slots: int):
+    import jax
+
+    from repro.core.quant import QuantConfig
+    from repro.pipeline import BasecallPipeline
+    from repro.serve import Server
+    from repro.serve.streaming import StreamingBasecallEngine
+
+    pipe = BasecallPipeline.from_preset(
+        "guppy", scale="tiny",
+        quant=QuantConfig(enabled=True, bits_w=5, bits_a=5),
+        backend="auto", beam_width=3)
+    pipe.init_params(jax.random.PRNGKey(0))
+    srv = Server(StreamingBasecallEngine(pipe, batch_slots=slots),
+                 max_queue=4096)
+    return srv, pipe
+
+
+def _pore(pipe, n_windows: float, chunk: int, seed: int):
+    """One pore's chunk feed covering ~n_windows overlap windows."""
+    win, hop = pipe.chunk.window, pipe.chunk.hop
+    n = int(win + max(n_windows - 1, 0) * hop)
+    sig = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+    return [sig[i:i + chunk] for i in range(0, n, chunk)]
+
+
+def _drain_timed(srv):
+    """Step to idle, timing each server step (per-chunk service tail)."""
+    steps = []
+    while srv.pending():
+        t0 = time.perf_counter()
+        srv.step()
+        steps.append(time.perf_counter() - t0)
+    return np.asarray(steps)
+
+
+def _warm(srv, pipe, chunk):
+    from repro.serve.streaming import StreamRequest
+
+    srv.submit(StreamRequest(chunks=_pore(pipe, 2, chunk, 0))).result()
+    srv.reset_metrics()
+
+
+def run(smoke: bool = True, pores=None, chunk: int = None,
+        windows: float = None):
+    """(name, value, derived) rows: TTFB + step tails per pore count,
+    then the eject-rate sweep."""
+    from repro.serve.streaming import EJECT, StreamRequest
+
+    pore_counts = pores or ([2, 4] if smoke else [4, 16, 64])
+    slots = max(pore_counts)
+    chunk = chunk or 60
+    windows = windows or (2.0 if smoke else 6.0)
+    rows = []
+
+    # -- time-to-first-base + per-chunk step tails vs concurrent pores --
+    srv, pipe = _build(slots)
+    _warm(srv, pipe, chunk)
+    for n_pores in pore_counts:
+        srv.reset_metrics()
+        for p in range(n_pores):
+            srv.submit(StreamRequest(
+                chunks=_pore(pipe, windows, chunk, seed=p + 1),
+                chunks_per_step=1))          # fixed arrival cadence
+        steps = _drain_timed(srv)
+        m = srv.metrics()
+        tag = f"stream_latency/pores{n_pores}"
+        rows.append((f"{tag}/ttfb_p50_s", f"{m.ttfe_p50_s:.4f}",
+                     f"{n_pores} pores, chunk={chunk} samples"))
+        rows.append((f"{tag}/ttfb_p99_s", f"{m.ttfe_p99_s:.4f}", ""))
+        rows.append((f"{tag}/step_p50_us",
+                     f"{np.percentile(steps, 50) * 1e6:.0f}",
+                     f"{len(steps)} engine steps"))
+        rows.append((f"{tag}/step_p99_us",
+                     f"{np.percentile(steps, 99) * 1e6:.0f}", ""))
+        rows.append((f"{tag}/occupancy", f"{m.occupancy:.3f}",
+                     f"{slots} slots"))
+
+    # -- eject-rate sweep: wall clock to drain a pool as the fraction ---
+    # of ejectable pores rises (the ReadUntil payoff)
+    n_pool = 8 if smoke else 32
+    long_windows = windows * (2 if smoke else 4)
+    for eject_pct in (0, 50, 100):
+        srv, pipe = _build(max(4, slots // 2))
+        _warm(srv, pipe, chunk)
+        n_eject = n_pool * eject_pct // 100
+        t0 = time.perf_counter()
+        for p in range(n_pool):
+            eject = (lambda prog: EJECT) if p < n_eject else None
+            srv.submit(StreamRequest(
+                chunks=_pore(pipe, long_windows, chunk, seed=100 + p),
+                eject=eject, eject_after_chunks=2))
+        srv.run_until_idle()
+        wall = time.perf_counter() - t0
+        m = srv.metrics()
+        rows.append((f"stream_latency/eject{eject_pct}/drain_s",
+                     f"{wall:.3f}",
+                     f"{n_pool} pores, {m.ejected} ejected"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny pore counts / short streams (CI)")
+    ap.add_argument("--pores", type=int, nargs="+", default=None,
+                    help="concurrent pore counts to sweep")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="samples per arriving chunk")
+    ap.add_argument("--windows", type=float, default=None,
+                    help="overlap windows per pore stream")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, val, derived in run(smoke=args.smoke, pores=args.pores,
+                                  chunk=args.chunk, windows=args.windows):
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

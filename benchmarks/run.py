@@ -43,7 +43,8 @@ def main() -> None:
 
     from . import (fig7_quant_throughput, fig9_breakdown, fig21_seat,
                    fig24_pim, fig25_adc, fig26_beamwidth, fig_serve_load,
-                   fig_shard_scaling, roofline, table3_models)
+                   fig_shard_scaling, fig_stream_latency, roofline,
+                   table3_models)
     suites = [
         ("table3", table3_models.run),
         ("fig7", fig7_quant_throughput.run),
@@ -57,6 +58,7 @@ def main() -> None:
         ("roofline", roofline.run),
         ("serve_load", lambda: fig_serve_load.run(smoke=args.quick)),
         ("shard_scaling", lambda: fig_shard_scaling.run(smoke=args.quick)),
+        ("stream_latency", lambda: fig_stream_latency.run(smoke=args.quick)),
     ]
     print("name,us_per_call,derived")
     failures = 0

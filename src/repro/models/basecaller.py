@@ -305,8 +305,23 @@ def lstm_cell(state, x_proj, u, b, q: QuantConfig):
     return (o * jax.nn.tanh(c_new), c_new)
 
 
+def init_rnn_state(cfg: BasecallerConfig, batch: int):
+    """Zero chunk-boundary recurrent state: one entry per RNN layer.
+
+    GRU layers carry ``(B, H)`` hidden state; LSTM layers carry an
+    ``((B, H), (B, H))`` (h, c) pair.  Feeding this to
+    ``apply_basecaller(..., rnn_state=...)`` is exactly the cold start
+    every whole-window call performs implicitly.
+    """
+    z = jnp.zeros((batch, cfg.rnn_hidden))
+    if cfg.rnn_type == "gru":
+        return [z for _ in range(cfg.rnn_layers)]
+    return [(z, z) for _ in range(cfg.rnn_layers)]
+
+
 def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool,
-             backend: Optional[Backend] = None, fused_rnn: bool = True):
+             backend: Optional[Backend] = None, fused_rnn: bool = True,
+             h0=None, return_h: bool = False):
     """x: (B, T, F) -> (B, T, H). Input projection hoisted out of the scan.
 
     With a ``backend``, the input projection runs on the integer
@@ -318,7 +333,18 @@ def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool,
     oracle for the persistent walk and the only serving path for LSTM;
     both are bitwise identical per backend.  Without a backend it is the
     differentiable fake-quant training path.
+
+    ``h0``/``return_h`` expose the walk's state-in/state-out contract
+    (``gru_seq`` already takes h0 explicitly; the scans' carry is the
+    final state): running ``[T1; T2]`` whole is bitwise identical to
+    running ``T1`` then ``T2`` with the state handed over — the
+    chunk-boundary contract streaming sessions rely on.  Forward
+    (``reverse=False``) only: a reversed walk's "final" state belongs to
+    the earliest timestep and cannot seed a future chunk.
     """
+    if (h0 is not None or return_h) and reverse:
+        raise ValueError("RNN state I/O is a forward-walk contract; "
+                         "a reversed layer's state cannot cross chunks")
     q = cfg.quant
     B, T, F = x.shape
     h = cfg.rnn_hidden
@@ -329,6 +355,7 @@ def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool,
     x_proj = jnp.swapaxes(x_proj, 0, 1)      # (T, B, gates*h)
 
     if cfg.rnn_type == "gru":
+        init = jnp.zeros((B, h)) if h0 is None else h0
         if backend is None:
             def step(hs, xp):
                 hn = gru_cell(hs, xp, layer["u"], layer["b"], q)
@@ -342,30 +369,36 @@ def _run_rnn(x, layer, cfg: BasecallerConfig, reverse: bool,
                 # persistent walk: flip-run-flip is bitwise the
                 # reverse=True scan (same per-step math, same order)
                 xs = jnp.flip(x_proj, axis=0) if reverse else x_proj
-                ys = backend.op("gru_seq")(xs, jnp.zeros((B, h)), u_q,
-                                           layer["b"])
+                ys = backend.op("gru_seq")(xs, init, u_q, layer["b"])
                 if reverse:
                     ys = jnp.flip(ys, axis=0)
-                return jnp.swapaxes(ys, 0, 1)
+                out = jnp.swapaxes(ys, 0, 1)
+                # state-out IS the walk's last emitted hidden row — the
+                # gru_seq state-in/state-out contract
+                return (out, ys[-1]) if return_h else out
             fused = backend.op("gru_cell")
 
             def step(hs, xp):
                 hn = fused(xp, hs, u_q, layer["b"])
                 return hn, hn
-        init = jnp.zeros((B, h))
     else:
         def step(hs, xp):
             hn = lstm_cell(hs, xp, layer["u"], layer["b"], q)
             return hn, hn[0]
-        init = (jnp.zeros((B, h)), jnp.zeros((B, h)))
+        if h0 is None:
+            init = (jnp.zeros((B, h)), jnp.zeros((B, h)))
+        else:
+            init = h0
 
-    _, ys = jax.lax.scan(step, init, x_proj, reverse=reverse)
-    return jnp.swapaxes(ys, 0, 1)
+    carry, ys = jax.lax.scan(step, init, x_proj, reverse=reverse)
+    out = jnp.swapaxes(ys, 0, 1)
+    return (out, carry) if return_h else out
 
 
 def apply_basecaller(params, signal, cfg: BasecallerConfig,
                      backend: Optional[Backend] = None,
-                     fused_rnn: bool = True):
+                     fused_rnn: bool = True,
+                     rnn_state=None, return_state: bool = False):
     """signal: (B, T, C) -> log-probs (B, T_out, n_classes).
 
     ``backend`` (a ``repro.kernels.registry.Backend``) switches the whole
@@ -380,7 +413,27 @@ def apply_basecaller(params, signal, cfg: BasecallerConfig,
     path); a ``PackedParams`` artifact consumes its pre-quantized weights
     as-is — ``fq_weight`` becomes the identity and the trace carries zero
     weight-quantization ops (asserted by ``tests/test_packed.py``).
+
+    ``rnn_state``/``return_state`` expose the CHUNK-BOUNDARY state I/O of
+    the recurrent stack (``init_rnn_state`` builds the zero state;
+    ``return_state=True`` additionally returns the per-layer final
+    states): for a forward-only stack (``rnn_direction="uni"``) the
+    recurrent walk over ``[T1; T2]`` equals walking ``T1`` then ``T2``
+    with the state handed across, bitwise — the contract
+    ``serve.streaming`` documents for per-lane state threading.  Only the
+    RNN layers carry state; the conv front-end is stateless, so exact
+    whole-model split parity additionally needs the conv receptive field's
+    halo of samples re-fed at the boundary (trivially satisfied by
+    kernel-1 convs).  Raises for "bidi"/"alt" stacks — their reversed
+    layers integrate FUTURE samples and have no streamable state.
     """
+    if rnn_state is not None or return_state:
+        if cfg.rnn_direction != "uni":
+            raise ValueError(
+                f"chunk-boundary RNN state I/O needs rnn_direction='uni'; "
+                f"{cfg.rnn_direction!r} stacks run reversed layers that "
+                f"integrate future samples, so no per-chunk state exists "
+                f"(stream whole windows instead — serve.streaming does)")
     if is_packed(params):
         if backend is None:
             raise ValueError(
@@ -410,6 +463,7 @@ def apply_basecaller(params, signal, cfg: BasecallerConfig,
                                 per_example=backend is not None))
         x = _dp(x, f"conv{ci}")
 
+    state_out = []
     for i, layer in enumerate(params["rnn"]):
         if cfg.rnn_direction == "bidi":
             fwd = _run_rnn(x, layer, cfg, reverse=False, backend=backend,
@@ -419,8 +473,15 @@ def apply_basecaller(params, signal, cfg: BasecallerConfig,
             x = jnp.concatenate([fwd, bwd], axis=-1)
         else:
             reverse = (cfg.rnn_direction == "alt") and (i % 2 == 1)
-            x = _run_rnn(x, layer, cfg, reverse=reverse, backend=backend,
-                         fused_rnn=fused_rnn)
+            h0 = None if rnn_state is None else rnn_state[i]
+            if return_state:
+                x, hT = _run_rnn(x, layer, cfg, reverse=reverse,
+                                 backend=backend, fused_rnn=fused_rnn,
+                                 h0=h0, return_h=True)
+                state_out.append(hT)
+            else:
+                x = _run_rnn(x, layer, cfg, reverse=reverse,
+                             backend=backend, fused_rnn=fused_rnn, h0=h0)
         x = _dp(x, f"rnn{i}")
 
     if backend is None:
@@ -428,7 +489,8 @@ def apply_basecaller(params, signal, cfg: BasecallerConfig,
     else:
         logits = _qdense_backend(x, params["fc"], cfg.quant, backend,
                                  params["fc"]["b"])
-    return _dp(jax.nn.log_softmax(logits, axis=-1), "logits")
+    lps = _dp(jax.nn.log_softmax(logits, axis=-1), "logits")
+    return (lps, state_out) if return_state else lps
 
 
 def serving_stage_boundaries(cfg: BasecallerConfig) -> Tuple[str, ...]:

@@ -347,13 +347,16 @@ class BasecallPipeline:
     @functools.cached_property
     def _decode_windows(self):
         """(params, windows (N, window, C), logit_lengths (N,)) ->
-        (reads (N, L), lens (N,)).
+        (reads (N, L), lens (N,), scores (N,)).
 
         Decode runs on the hash-merge beam decoder (``ctc_beam_search_hash
         _batch``) whose per-frame merge/top-k dispatches through the kernel
         registry on this pipeline's backend; ``logit_lengths`` masks the
-        zero-padded frames of tail windows out of the decode.  Dispatches
-        to one jitted instance per ambient mesh (see ``_per_mesh``).
+        zero-padded frames of tail windows out of the decode.  ``scores``
+        is the top beam's total log-probability per window (greedy: the
+        best path's summed per-frame max) — the confidence signal the
+        streaming eject policy consumes.  Dispatches to one jitted
+        instance per ambient mesh (see ``_per_mesh``).
         """
         return self._per_mesh(self._build_decode_windows)
 
@@ -376,11 +379,11 @@ class BasecallPipeline:
             if W > 1:
                 with jax.named_scope("stage:beam_in"):
                     lps = shd.constrain(lps, ("dp", None, None))
-                reads, lens, _ = ctc_lib.ctc_beam_search_hash_batch(
+                reads, lens, scores = ctc_lib.ctc_beam_search_hash_batch(
                     lps, beam_width=W, max_len=L,
                     logit_lengths=logit_lengths, backend=backend,
                     strip_frames=strip)
-                reads, lens = reads[:, 0], lens[:, 0]
+                reads, lens, scores = reads[:, 0], lens[:, 0], scores[:, 0]
             else:
                 reads, lens = jax.vmap(
                     lambda lp, ll: ctc_lib.ctc_greedy_decode(
@@ -389,11 +392,20 @@ class BasecallPipeline:
                     reads, ((0, 0), (0, L - reads.shape[1])),
                     constant_values=-1)
                 lens = jnp.minimum(lens, L)
+                # greedy confidence: the best path's log-probability over
+                # the valid (non-padded) frames — the W==1 analogue of the
+                # top beam's total score
+                T = lps.shape[1]
+                frame_max = jnp.max(lps, axis=-1)              # (N, T)
+                valid = jnp.arange(T)[None, :] < logit_lengths[:, None]
+                scores = jnp.sum(jnp.where(valid, frame_max, 0.0), axis=-1)
             with jax.named_scope("stage:reads_out"):
                 reads = shd.replicate(reads)
             with jax.named_scope("stage:lens_out"):
                 lens = shd.replicate(lens)
-            return reads, lens
+            with jax.named_scope("stage:scores_out"):
+                scores = shd.replicate(scores)
+            return reads, lens, scores
 
         return fn
 
@@ -443,7 +455,7 @@ class BasecallPipeline:
                  + bc.serving_stage_boundaries(self.mcfg))
         if self.beam_width > 1:
             names += ("beam_in",)
-        return names + ("reads_out", "lens_out")
+        return names + ("reads_out", "lens_out", "scores_out")
 
     def fused_stage_boundaries(self) -> Tuple[str, ...]:
         """Stage boundaries of the fused SEAT-view serving trace."""
@@ -523,7 +535,7 @@ class BasecallPipeline:
             # trace built for that other mesh (use_mesh(None) masks outer
             # meshes the same way)
             with shd.use_mesh(mesh):
-                reads, lens = self._decode_windows(params, grp, fl)
+                reads, lens, _scores = self._decode_windows(params, grp, fl)
             yield np.asarray(reads[:n]), np.asarray(lens[:n])
 
     def basecall(self, signal, params=None,
@@ -562,6 +574,37 @@ class BasecallPipeline:
         return BasecallResult.from_window_reads(
             np.concatenate(reads), np.concatenate(lens),
             max_read_len=self.max_read_len, span=span)
+
+    def stream(self, params=None):
+        """Open an incremental :class:`~repro.serve.streaming.
+        StreamingSession` bound to this pipeline.
+
+        Feed raw-signal chunks as they arrive from a pore
+        (``session.feed``), read provisional bases as overlap windows
+        close, and ``session.finalize()`` into a :class:`BasecallResult`
+        bitwise identical to :meth:`basecall` on the concatenated signal —
+        chunk boundaries never change the result.  Captures the ambient
+        ``dist.sharding.use_mesh`` mesh at creation, like
+        :meth:`basecall_iter`.
+
+        Args:
+            params: optional checkpoint override (defaults to the bound
+                pipeline params; packed via :meth:`serving_params`).
+
+        Returns:
+            A live ``StreamingSession`` decoding windows as they complete.
+
+        Example::
+
+            sess = pipe.stream()
+            for chunk in chunks:
+                sess.feed(chunk)
+            result = sess.finalize()     # == pipe.basecall(full_signal)
+        """
+        # local import: serve.streaming imports this module for the
+        # shared BasecallResult finalization
+        from repro.serve.streaming import StreamingSession
+        return StreamingSession(self, params=params)
 
     # -- fixed-window serving ----------------------------------------------
     def basecall_windows(self, signal_batch, params=None):

@@ -1,6 +1,11 @@
-"""Serving layer: ``api.Server`` request lifecycle over the two
-``EngineProtocol`` step-executors (LM tokens / base-calling windows),
-all driving one ``scheduler.SlotScheduler``."""
+"""Serving layer: ``api.Server`` request lifecycle over the
+``EngineProtocol`` step-executors (LM tokens / base-calling windows /
+live chunk streams), all driving one ``scheduler.SlotScheduler``.
+
+Engines import the heavy model stacks, so they live in their own
+modules — ``serve.engine`` (token LM), ``serve.basecall_engine`` (whole
+reads), ``serve.streaming`` (incremental ReadUntil streams with adaptive
+ejection) — and are imported directly, not re-exported here."""
 from repro.serve.api import (BasecallRequest, EngineProtocol, LMRequest,
                              QueueFull, ServeEvent, ServeFuture, ServeResult,
                              Server, ServerMetrics)

@@ -52,6 +52,7 @@ STATUS_CANCELLED = "cancelled"
 STATUS_EXPIRED = "expired"
 STATUS_SHED = "shed"
 STATUS_ERROR = "error"
+STATUS_EJECTED = "ejected"
 
 
 class QueueFull(RuntimeError):
@@ -146,6 +147,14 @@ class ServerMetrics:
     #: requests rejected at submit by engine validation (e.g. prompt +
     #: max_tokens over the KV capacity) — resolved with status "error"
     errors: int = 0
+    #: streaming lanes abandoned early by their eject policy (ReadUntil)
+    #: — resolved with status "ejected" and the provisional read
+    ejected: int = 0
+    #: submit -> FIRST incremental event latency tails — the streaming
+    #: responsiveness axis (how quickly a pore sees provisional bases),
+    #: distinct from the full-request latency percentiles above
+    ttfe_p50_s: float = 0.0
+    ttfe_p99_s: float = 0.0
 
     def rows(self, prefix: str = "serve") -> List[tuple]:
         """``benchmarks._util.emit``-shaped CSV rows."""
@@ -161,6 +170,9 @@ class ServerMetrics:
              f"expired={self.expired}"),
             (f"{prefix}/latency_p50_s", f"{self.latency_p50_s:.4f}", ""),
             (f"{prefix}/latency_p99_s", f"{self.latency_p99_s:.4f}", ""),
+            (f"{prefix}/ttfe_p50_s", f"{self.ttfe_p50_s:.4f}",
+             f"ejected={self.ejected}"),
+            (f"{prefix}/ttfe_p99_s", f"{self.ttfe_p99_s:.4f}", ""),
         ]
 
 
@@ -177,11 +189,16 @@ class EngineProtocol(Protocol):
     driver loop the engines used to hand-roll (``run()``) lives in
     ``Server`` now — engines must not grow one back.
 
-    Optional extension (duck-typed via ``getattr``, not required by the
-    protocol): ``validate(request) -> Optional[str]`` — a non-None return
-    is an error message and the server resolves the request with status
-    ``"error"`` at submit instead of queueing it (``ServingEngine`` uses
-    this to reject requests that would overflow its KV cache).
+    Optional extensions (duck-typed via ``getattr``, not required by the
+    protocol):
+
+    * ``validate(request) -> Optional[str]`` — a non-None return is an
+      error message and the server resolves the request with status
+      ``"error"`` at submit instead of queueing it (``ServingEngine``
+      uses this to reject requests that would overflow its KV cache).
+    * ``final_status(native) -> str`` — the terminal status for a
+      retired request (default ``"ok"``; ``StreamingBasecallEngine``
+      returns ``"ejected"`` for lanes its eject policy abandoned).
     """
     sched: SlotScheduler
     steps: int
@@ -309,7 +326,8 @@ class Server:
         self._occ_dev_sum: Optional[np.ndarray] = None
         self._counts = {STATUS_OK: 0, STATUS_CANCELLED: 0,
                         STATUS_EXPIRED: 0, STATUS_SHED: 0, STATUS_ERROR: 0,
-                        "rejected": 0, "submitted": 0}
+                        STATUS_EJECTED: 0, "rejected": 0, "submitted": 0}
+        self._ttfe: List[float] = []             # submit -> first event
         self._started_at: Optional[float] = None
 
     # -- submission ---------------------------------------------------------
@@ -491,7 +509,13 @@ class Server:
                 continue
             if rec.result is not None:
                 continue                        # already terminal
-            self._resolve(rec, STATUS_OK, self.engine.result_of(native))
+            # engines may retire a request in a non-ok terminal state
+            # (duck-typed ``final_status``, e.g. a streaming lane the
+            # eject policy abandoned resolves as "ejected" — with the
+            # provisional read as its value)
+            status = getattr(self.engine, "final_status",
+                             lambda n: STATUS_OK)(native)
+            self._resolve(rec, status, self.engine.result_of(native))
 
     def run_until_idle(self, max_steps: int = 1_000_000
                        ) -> Dict[int, ServeResult]:
@@ -528,10 +552,15 @@ class Server:
 
     def _pump_events(self) -> None:
         kind = self.engine.event_kind
+        now = self.clock()
         for rec in list(self._live.values()):
             if rec.native is None:
                 continue
             out = self.engine.progress(rec.native)
+            if rec.emitted == 0 and len(out) > 0:
+                # time-to-first-event: the streaming responsiveness tail
+                # (submit -> first provisional output, not the final)
+                self._ttfe.append(now - rec.submitted_at)
             while rec.emitted < len(out):
                 rec.events.append(ServeEvent(rid=rec.rid, kind=kind,
                                              index=rec.emitted,
@@ -573,6 +602,7 @@ class Server:
         self._terminal_order.clear()
         self.results.clear()
         self._latencies.clear()
+        self._ttfe.clear()
         self._occ_sum = 0.0
         self._occ_dev_sum = None
         self.engine.steps = 0
@@ -627,6 +657,11 @@ class Server:
             else 0.0,
             devices=dp,
             occupancy_per_device=occ_dev,
+            ejected=self._counts[STATUS_EJECTED],
+            ttfe_p50_s=(float(np.percentile(self._ttfe, 50))
+                        if self._ttfe else 0.0),
+            ttfe_p99_s=(float(np.percentile(self._ttfe, 99))
+                        if self._ttfe else 0.0),
         )
 
 

@@ -174,8 +174,8 @@ class BasecallEngine:
             frames = jax.device_put(
                 frames, shd.batch_sharding(self.mesh, frames.ndim))
         with self._mesh_ctx():
-            reads, lens = self.pipe._decode_windows(self.params, batch,
-                                                    frames)
+            reads, lens, _scores = self.pipe._decode_windows(self.params,
+                                                             batch, frames)
         reads, lens = np.asarray(reads), np.asarray(lens)
         self.steps += 1
         for slot, req in enumerate(self.sched.slots):

@@ -37,7 +37,8 @@ def test_docs_exist_and_have_snippets():
     """README + the three guides exist, each with runnable python."""
     names = {p.name for p in DOC_FILES}
     assert "README.md" in names
-    for guide in ("kernels.md", "serving.md", "sharding.md"):
+    for guide in ("kernels.md", "serving.md", "sharding.md",
+                  "streaming.md"):
         assert guide in names, f"docs/{guide} missing"
     for p in DOC_FILES:
         assert extract_blocks(p), f"{p.name} has no fenced python blocks"

@@ -23,6 +23,7 @@ from repro.kernels import registry  # noqa: E402
 from repro.pipeline.pipeline import (BasecallPipeline,  # noqa: E402
                                      BasecallResult)
 from repro.serve import api  # noqa: E402
+from repro.serve import streaming  # noqa: E402
 from repro.serve.basecall_engine import BasecallEngine  # noqa: E402
 from repro.serve.engine import ServingEngine  # noqa: E402
 from repro.serve.scheduler import SlotScheduler  # noqa: E402
@@ -70,6 +71,18 @@ PRESENT = {
     # engines + scheduler
     "ServingEngine": ServingEngine,
     "BasecallEngine": BasecallEngine,
+    # streaming (ReadUntil)
+    "BasecallPipeline.stream": BasecallPipeline.stream,
+    "StreamingSession": streaming.StreamingSession,
+    "StreamingSession.feed": streaming.StreamingSession.feed,
+    "StreamingSession.finalize": streaming.StreamingSession.finalize,
+    "StreamingSession.progress": streaming.StreamingSession.progress,
+    "StreamingBasecallEngine": streaming.StreamingBasecallEngine,
+    "StreamRequest": streaming.StreamRequest,
+    "StreamProgress": streaming.StreamProgress,
+    "ProvisionalBases": streaming.ProvisionalBases,
+    "ScoreEjectPolicy": streaming.ScoreEjectPolicy,
+    "apply_patches": streaming.apply_patches,
     "SlotScheduler": SlotScheduler,
     "SlotScheduler.submit": SlotScheduler.submit,
     "SlotScheduler.admit": SlotScheduler.admit,
@@ -113,6 +126,9 @@ FULL = [
     "Server.submit",
     "Server.stream",
     "Server.metrics",
+    "BasecallPipeline.stream",
+    "StreamingSession",
+    "StreamingBasecallEngine",
     "registry.register_op",
     "registry.get_op",
     "sharding.use_mesh",

@@ -395,6 +395,24 @@ def test_cancel_queued_and_active():
     assert not any(eng.sched.active_mask())
 
 
+def test_cancel_mid_stream_terminates_consumer_generator():
+    """Regression: cancel() on a request being consumed via stream() must
+    terminate the generator with a final "cancelled" event — the consumer
+    must not block forever waiting for events that will never come."""
+    eng = ToyEngine(batch_slots=1)
+    srv = Server(eng)
+    events = []
+    for ev in srv.stream(ToyRequest(work=50), max_steps=200):
+        events.append(ev)
+        if len(events) == 3:
+            assert srv.cancel(ev.rid)
+    final = events[-1]
+    assert final.kind == "final"
+    assert final.payload.status == "cancelled"
+    assert len(events) < 50 + 1                   # terminated early
+    assert not any(eng.sched.active_mask())       # lane reclaimed
+
+
 def test_degenerate_toy_request_completes_inline():
     eng = ToyEngine(batch_slots=1)
     srv = Server(eng, max_queue=1)
