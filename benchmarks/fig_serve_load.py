@@ -48,6 +48,43 @@ def _basecall_requests(pipe, n: int, seed: int = 0):
         for _ in range(n)]
 
 
+def _build_multitenant_server(model_ids, slots: int, backpressure: str,
+                              max_queue: int):
+    """One Server hosting every named serving tier (``configs.SERVE_TIERS``)
+    behind a ``ModelRegistry``, multiplexed over per-model slot groups."""
+    from repro import configs
+    from repro.serve import ModelRegistry, Server
+    from repro.serve.multitenant import MultiModelBasecallEngine
+
+    reg = ModelRegistry(budget_bytes=256 << 20)
+    pipes = {}
+    for i, tier in enumerate(model_ids):
+        pipe = configs.serve_tier_pipeline(tier, seed=i, backend="auto")
+        reg.register_basecaller(tier, pipe)
+        pipes[tier] = pipe
+    eng = MultiModelBasecallEngine(reg, model_ids, batch_slots=slots)
+    srv = Server(eng, max_queue=max_queue, backpressure=backpressure)
+    return srv, reg, pipes
+
+
+def _multitenant_requests(pipes, n: int, seed: int = 0):
+    """Round-robin the hosted tiers with mixed read lengths, so every
+    model's group sees load and short reads retire early."""
+    from repro.serve import BasecallRequest
+
+    rng = np.random.default_rng(seed)
+    ids = list(pipes)
+    out = []
+    for i in range(n):
+        mid = ids[i % len(ids)]
+        win = pipes[mid].mcfg.input_len
+        out.append(BasecallRequest(
+            signal=rng.standard_normal(
+                int(rng.integers(1, 5) * win * 0.9)).astype(np.float32),
+            model=mid))
+    return out
+
+
 def _build_lm_server(slots: int, backpressure: str, max_queue: int,
                      max_len: int = 64, **engine_kw):
     import jax
@@ -115,17 +152,36 @@ def _one_engine(name: str, srv, requests, rate: float, units_of):
     units = sum(units_of(r) for r in srv.results.values() if r.ok)
     rows.append((f"serve_load/{name}/units_per_s",
                  f"{units / m.elapsed_s:.1f}",
-                 "decoded windows/s" if name == "basecall" else "tokens/s"))
+                 "decoded windows/s"
+                 if name in ("basecall", "multitenant") else "tokens/s"))
     return rows
 
 
 def run(smoke: bool = True, engine: str = "both", requests: int = None,
         rate: float = None, slots: int = None, max_tokens: int = 8,
-        backpressure: str = "shed-oldest"):
+        backpressure: str = "shed-oldest", models: str = None):
     n = requests or (6 if smoke else 32)
     slots = slots or (2 if smoke else 8)
     rate = rate or (4.0 if smoke else 8.0)
     rows = []
+    if models:
+        from repro.serve import BasecallRequest
+
+        ids = [m.strip() for m in models.split(",") if m.strip()]
+        srv, reg, pipes = _build_multitenant_server(
+            ids, slots, backpressure, max_queue=max(2 * n, 4))
+        # warm every tenant's jitted decode before the open loop
+        for mid, pipe in pipes.items():
+            srv.submit(BasecallRequest(
+                signal=np.zeros(pipe.mcfg.input_len, np.float32),
+                model=mid)).result()
+        reqs = _multitenant_requests(pipes, n)
+        rows += _one_engine("multitenant", srv, reqs, rate,
+                            lambda r: r.value.window_reads.shape[0])
+        rows += [(name, f"{val:.0f}", "")
+                 for name, val in reg.stats().rows(
+                     prefix="serve_load/multitenant/registry")]
+        return rows              # --models runs the fleet sweep alone
     if engine in ("both", "basecall"):
         srv, pipe = _build_basecall_server(slots, backpressure,
                                            max_queue=max(2 * n, 4))
@@ -197,13 +253,18 @@ def main():
     ap.add_argument("--max-tokens", type=int, default=8)
     ap.add_argument("--backpressure", default="shed-oldest",
                     choices=["reject", "block", "shed-oldest"])
+    ap.add_argument("--models", default=None,
+                    help="comma-separated configs.SERVE_TIERS ids (e.g. "
+                         "small,large): run the multi-tenant fleet sweep "
+                         "instead of the single-model engines")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, val, derived in run(smoke=args.smoke, engine=args.engine,
                                   requests=args.requests, rate=args.rate,
                                   slots=args.slots,
                                   max_tokens=args.max_tokens,
-                                  backpressure=args.backpressure):
+                                  backpressure=args.backpressure,
+                                  models=args.models):
         print(f"{name},{val},{derived}")
 
 

@@ -334,6 +334,48 @@ def retrace_findings(mesh=None) -> List[Finding]:
         found.append(Finding(
             "trace-retrace", "serving_engine.step[lm-paged]",
             f"two same-aval calls compiled {n} jit entries (expected 1)"))
+
+    found += _multitenant_retrace(mesh)
+    return found
+
+
+def _multitenant_retrace(mesh=None) -> List[Finding]:
+    """PER-MODEL retrace guard for the multi-tenant engine: every hosted
+    tenant's group sub-batch has a fixed shape, so two engine steps must
+    leave each model's decode with exactly one jit entry — a tenant whose
+    lane batch flaps avals would retrace on every step of a fleet."""
+    import numpy as np
+
+    from repro.serve.api import BasecallRequest
+    from repro.serve.multitenant import MultiModelBasecallEngine
+    from repro.serve.registry import ModelRegistry
+
+    found: List[Finding] = []
+    reg = ModelRegistry()
+    pipes = {}
+    for mid, preset in (("small", "guppy"), ("large", "chiron")):
+        pipes[mid] = _tiny_pipe(preset)
+        reg.register_basecaller(mid, pipes[mid])
+    with _mesh_ctx(mesh):
+        eng = MultiModelBasecallEngine(reg, tuple(pipes), batch_slots=2)
+    for rid, (mid, pipe) in enumerate(pipes.items()):
+        sig = np.zeros((2 * pipe.mcfg.input_len,), np.float32)
+        eng.submit(eng.make_request(rid, BasecallRequest(signal=sig,
+                                                         model=mid)))
+    eng.admit()
+    eng.step()
+    eng.step()
+    for mid, pipe in pipes.items():
+        fn = pipe._decode_windows.cache.get(eng.mesh)
+        n = -1 if fn is None else fn._cache_size()
+        if n != 1:
+            where = "never ran" if fn is None else f"compiled {n} jit entries"
+            found.append(Finding(
+                "trace-retrace",
+                f"multitenant.step[{mid}{'/mesh' if mesh else ''}]",
+                f"two same-aval engine steps for hosted model {mid!r} "
+                f"{where} (expected exactly 1): the tenant's group "
+                "sub-batch must keep a fixed shape across steps"))
     return found
 
 

@@ -63,3 +63,30 @@ def get_config(arch_id: str):
 
 def get_smoke(arch_id: str):
     return _module(arch_id).smoke_config()
+
+
+#: multi-tenant serving tiers: named speed/accuracy points a fleet hosts
+#: side by side (small triages ReadUntil streams, large makes the final
+#: calls).  Each maps a tier id -> (basecaller arch, pipeline kwargs);
+#: ``serve_tier_pipeline`` turns one into a ready BasecallPipeline for
+#: ``ModelRegistry.register_basecaller``.
+SERVE_TIERS = {
+    "small": ("guppy", {"scale": "tiny", "beam_width": 3}),
+    "large": ("chiron", {"scale": "tiny", "beam_width": 5}),
+}
+
+
+def serve_tier_pipeline(tier_id: str, seed: int = 0, **overrides):
+    """Build the named serving tier's ``BasecallPipeline``, params
+    initialized from ``seed`` (overrides forward to ``from_preset`` —
+    e.g. ``backend=``, ``batch_windows=``)."""
+    import jax
+
+    from repro.pipeline.pipeline import BasecallPipeline
+    if tier_id not in SERVE_TIERS:
+        raise KeyError(f"unknown serving tier {tier_id!r} "
+                       f"(known: {sorted(SERVE_TIERS)})")
+    arch, kw = SERVE_TIERS[tier_id]
+    pipe = BasecallPipeline.from_preset(arch, **{**kw, **overrides})
+    pipe.init_params(jax.random.PRNGKey(seed))
+    return pipe

@@ -288,6 +288,21 @@ class BasecallPipeline:
         _fifo_put(self._pack_cache, id(p), (p, artifact))
         return artifact
 
+    def pack_artifact(self, params=None):
+        """Build the quantize-once serving artifact WITHOUT touching the
+        pipeline's own cache.
+
+        The external-cache hook (``serve.registry.ModelRegistry``'s
+        evict -> re-pack path): the packer is jitted and deterministic, so
+        every call returns a bitwise-identical artifact and the caller
+        fully owns its lifetime — evicting it frees the memory.  With
+        ``packed=False`` (or already-packed ``params``) the weights pass
+        through unchanged, like :meth:`serving_params`."""
+        p = self._params(params)
+        if not self.packed or bc.is_packed(p):
+            return p
+        return bc.pack_basecaller(p, self.mcfg)
+
     def data_config(self, *, kmer: int = 1, mean_dwell: float = 6.0,
                     max_label_len: Optional[int] = None
                     ) -> genome.SignalConfig:
@@ -342,6 +357,7 @@ class BasecallPipeline:
                 _fifo_put(fns, key, fn)
             return fn(*args)
 
+        dispatch.cache = fns  # mesh -> jit fn; analysis retrace guard hook
         return dispatch
 
     @functools.cached_property

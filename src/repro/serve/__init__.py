@@ -2,15 +2,25 @@
 ``EngineProtocol`` step-executors (LM tokens / base-calling windows /
 live chunk streams), all driving one ``scheduler.SlotScheduler``.
 
+Multi-tenant serving: ``registry.ModelRegistry`` holds many packed
+artifacts (LRU under a byte budget, evict -> re-pack bitwise identical)
+and ``multitenant.MultiModelBasecallEngine`` multiplexes hosted models
+over per-model slot groups in one scheduler, routed by the requests'
+``model=`` field.
+
 Engines import the heavy model stacks, so they live in their own
 modules — ``serve.engine`` (token LM), ``serve.basecall_engine`` (whole
 reads), ``serve.streaming`` (incremental ReadUntil streams with adaptive
-ejection) — and are imported directly, not re-exported here."""
+ejection), ``serve.multitenant`` (multi-model fleets) — and are imported
+directly, not re-exported here.  The dependency-light ``ModelRegistry``
+is re-exported."""
 from repro.serve.api import (BasecallRequest, EngineProtocol, LMRequest,
-                             QueueFull, ServeEvent, ServeFuture, ServeResult,
-                             Server, ServerMetrics)
+                             ModelMetrics, QueueFull, ServeEvent,
+                             ServeFuture, ServeResult, Server, ServerMetrics)
+from repro.serve.registry import ModelRegistry, RegistryStats
 from repro.serve.scheduler import SlotScheduler
 
 __all__ = ["Server", "ServeFuture", "ServeResult", "ServeEvent",
-           "ServerMetrics", "BasecallRequest", "LMRequest", "QueueFull",
-           "EngineProtocol", "SlotScheduler"]
+           "ServerMetrics", "ModelMetrics", "BasecallRequest", "LMRequest",
+           "QueueFull", "EngineProtocol", "SlotScheduler", "ModelRegistry",
+           "RegistryStats"]

@@ -65,10 +65,15 @@ class QueueFull(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class BasecallRequest:
-    """One raw-signal read to base-call (served by ``BasecallEngine``)."""
+    """One raw-signal read to base-call (served by ``BasecallEngine`` or,
+    with ``model=``, a hosted tenant of ``MultiModelBasecallEngine``)."""
     signal: np.ndarray                 # (T,) or (T, C) raw samples
     priority: int = 0                  # higher admits first
     deadline: Optional[float] = None   # seconds after submit (server clock)
+    #: hosted-model routing: which of the server's packed artifacts serves
+    #: this read (None -> the engine's default).  A model the engine does
+    #: not host resolves with a clear ``"error"`` result at submit.
+    model: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +84,8 @@ class LMRequest:
     eos_id: Optional[int] = None
     priority: int = 0
     deadline: Optional[float] = None
+    #: hosted-model routing, as on :class:`BasecallRequest`
+    model: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +128,23 @@ class ServeResult:
 
 
 @dataclasses.dataclass(frozen=True)
+class ModelMetrics:
+    """Per hosted-model slice of one ``Server.metrics()`` snapshot
+    (multi-tenant serving: one row set per model id, so a cold tenant or
+    an error-prone client shows up per model, not diluted pool-wide)."""
+    submitted: int = 0
+    completed: int = 0
+    errors: int = 0
+    ejected: int = 0
+    #: time-averaged occupancy of THIS model's slot group (engines
+    #: exposing ``model_occupancy``; 0.0 for single-group engines)
+    occupancy: float = 0.0
+    requests_per_s: float = 0.0
+    latency_p50_s: float = 0.0
+    latency_p99_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
 class ServerMetrics:
     """One ``Server.metrics()`` snapshot — the serving counterpart of the
     fig9 latency breakdown (requests/s + occupancy + queue + tails)."""
@@ -155,11 +179,16 @@ class ServerMetrics:
     #: distinct from the full-request latency percentiles above
     ttfe_p50_s: float = 0.0
     ttfe_p99_s: float = 0.0
+    #: per hosted-model metric slices, keyed by model id (empty for
+    #: engines/requests without ``model=`` routing)
+    per_model: Dict[str, ModelMetrics] = dataclasses.field(
+        default_factory=dict)
 
     def rows(self, prefix: str = "serve") -> List[tuple]:
-        """``benchmarks._util.emit``-shaped CSV rows."""
+        """``benchmarks._util.emit``-shaped CSV rows (pool-wide rows, then
+        one row set per hosted model id)."""
         per_dev = " ".join(f"{o:.3f}" for o in self.occupancy_per_device)
-        return [
+        out = [
             (f"{prefix}/requests_per_s", f"{self.requests_per_s:.2f}",
              f"{self.completed} completed in {self.elapsed_s:.2f}s"),
             (f"{prefix}/occupancy", f"{self.occupancy:.3f}",
@@ -174,6 +203,18 @@ class ServerMetrics:
              f"ejected={self.ejected}"),
             (f"{prefix}/ttfe_p99_s", f"{self.ttfe_p99_s:.4f}", ""),
         ]
+        for mid in sorted(self.per_model):
+            m = self.per_model[mid]
+            p = f"{prefix}/model/{mid}"
+            out += [
+                (f"{p}/requests_per_s", f"{m.requests_per_s:.2f}",
+                 f"{m.completed} completed of {m.submitted} submitted"),
+                (f"{p}/occupancy", f"{m.occupancy:.3f}", ""),
+                (f"{p}/latency_p50_s", f"{m.latency_p50_s:.4f}", ""),
+                (f"{p}/latency_p99_s", f"{m.latency_p99_s:.4f}", ""),
+                (f"{p}/errors", str(m.errors), f"ejected={m.ejected}"),
+            ]
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +240,16 @@ class EngineProtocol(Protocol):
     * ``final_status(native) -> str`` — the terminal status for a
       retired request (default ``"ok"``; ``StreamingBasecallEngine``
       returns ``"ejected"`` for lanes its eject policy abandoned).
+    * ``model_of(request) -> Optional[str]`` — the hosted-model id
+      serving a request (its ``model=`` resolved against the engine's
+      default); the server keys per-model ``metrics()`` slices on it.
+    * ``model_occupancy() -> Dict[str, float]`` — instantaneous per-model
+      slot-group occupancy, accumulated into per-model metrics
+      (``MultiModelBasecallEngine``).
+    * ``device_occupancy() -> np.ndarray`` — instantaneous (dp,)
+      per-device occupancy for engines whose lane -> device layout is not
+      one contiguous pool-wide fold (multi-tenant groups are each
+      lane-major over dp on their own).
     """
     sched: SlotScheduler
     steps: int
@@ -281,6 +332,7 @@ class _Record:
     priority: int
     submitted_at: float
     expires_at: Optional[float]
+    model: Optional[str] = None       # per-model metrics key (or None)
     events: List[ServeEvent] = dataclasses.field(default_factory=list)
     emitted: int = 0
     result: Optional[ServeResult] = None
@@ -327,8 +379,27 @@ class Server:
         self._counts = {STATUS_OK: 0, STATUS_CANCELLED: 0,
                         STATUS_EXPIRED: 0, STATUS_SHED: 0, STATUS_ERROR: 0,
                         STATUS_EJECTED: 0, "rejected": 0, "submitted": 0}
+        # per hosted-model metric state, keyed by the engine's model_of()
+        # (requests without model routing never create a slice)
+        self._per_model: Dict[str, dict] = {}
         self._ttfe: List[float] = []             # submit -> first event
         self._started_at: Optional[float] = None
+
+    def _model_id_of(self, request: Any) -> Optional[str]:
+        fn = getattr(self.engine, "model_of", None)
+        if fn is not None:
+            return fn(request)
+        return getattr(request, "model", None)
+
+    def _mstats(self, mid: str) -> dict:
+        ms = self._per_model.get(mid)
+        if ms is None:
+            ms = dict(self._counts, latencies=[], occ_sum=0.0)
+            for k in ms:
+                if k not in ("latencies", "occ_sum"):
+                    ms[k] = 0
+            self._per_model[mid] = ms
+        return ms
 
     # -- submission ---------------------------------------------------------
 
@@ -369,9 +440,12 @@ class Server:
         self._counts["submitted"] += 1
         prio = getattr(request, "priority", 0)
         ddl = getattr(request, "deadline", None)
+        mid = self._model_id_of(request)
         rec = _Record(rid=rid, request=request, native=None, priority=prio,
-                      submitted_at=now,
+                      submitted_at=now, model=mid,
                       expires_at=None if ddl is None else now + ddl)
+        if mid is not None:
+            self._mstats(mid)["submitted"] += 1
         self._records[rid] = rec
         if self.engine.degenerate(request):
             self._resolve(rec, STATUS_OK, self.engine.empty_result(request))
@@ -381,6 +455,10 @@ class Server:
         # with a clear error result instead of wedging a lane later
         err = getattr(self.engine, "validate", lambda r: None)(request)
         if err is not None:
+            # counted ONCE, as an error: validation rejections (unknown
+            # model, over-capacity request) resolve before the queue is
+            # consulted, so they can never also count as a backpressure
+            # rejection — pool-wide and per-model alike
             self._resolve(rec, STATUS_ERROR, None, error=err)
             return ServeFuture(self, rid)
 
@@ -498,7 +576,16 @@ class Server:
             dp = getattr(self.engine, "dp", 1)
             if self._occ_dev_sum is None or len(self._occ_dev_sum) != dp:
                 self._occ_dev_sum = np.zeros((dp,))
-            self._occ_dev_sum += sched.group_occupancy(dp)
+            # engines whose lane -> device layout is not one pool-wide
+            # contiguous fold (multi-tenant slot groups) expose their own
+            # per-device view; everyone else folds the pool over dp
+            dev_fn = getattr(self.engine, "device_occupancy", None)
+            self._occ_dev_sum += (dev_fn() if dev_fn is not None
+                                  else sched.group_occupancy(dp))
+            mo_fn = getattr(self.engine, "model_occupancy", None)
+            if mo_fn is not None:
+                for mid, occ in mo_fn().items():
+                    self._mstats(mid)["occ_sum"] += occ
             self.engine.step()
         self._pump_events()
         for rid, native in sched.drain_finished().items():
@@ -582,6 +669,11 @@ class Server:
         self._counts[status] += 1
         if status == STATUS_OK:
             self._latencies.append(res.latency)
+        if rec.model is not None:
+            ms = self._mstats(rec.model)
+            ms[status] += 1
+            if status == STATUS_OK:
+                ms["latencies"].append(res.latency)
         # bound terminal-record retention: a server that lives for
         # millions of requests must not pin every signal/result forever
         self._terminal_order.append(rec.rid)
@@ -595,7 +687,9 @@ class Server:
     def reset_metrics(self) -> None:
         """Zero the observability state (benchmarks call this after their
         warmup request so compile time stays out of the tails): delivered
-        results, latencies, occupancy/step accounting, counters.
+        results, latencies, occupancy/step accounting, counters — and
+        every per-model slice, in the same call, so pool-wide and
+        per-model counters can never disagree about the epoch.
         In-flight requests are unaffected and still deliver."""
         for rid in self._terminal_order:
             self._records.pop(rid, None)
@@ -608,6 +702,7 @@ class Server:
         self.engine.steps = 0
         for k in self._counts:
             self._counts[k] = 0
+        self._per_model.clear()
         self._started_at = None
 
     def metrics(self) -> ServerMetrics:
@@ -636,6 +731,21 @@ class Server:
             occ_dev = tuple(float(o) for o in self._occ_dev_sum / steps)
         else:
             occ_dev = (0.0,) * dp
+        per_model = {}
+        for mid, ms in self._per_model.items():
+            mlat = np.asarray(ms["latencies"]) if ms["latencies"] else None
+            per_model[mid] = ModelMetrics(
+                submitted=ms["submitted"],
+                completed=ms[STATUS_OK],
+                errors=ms[STATUS_ERROR],
+                ejected=ms[STATUS_EJECTED],
+                occupancy=ms["occ_sum"] / steps if steps else 0.0,
+                requests_per_s=(ms[STATUS_OK] / elapsed
+                                if elapsed > 0 else 0.0),
+                latency_p50_s=(float(np.percentile(mlat, 50))
+                               if mlat is not None else 0.0),
+                latency_p99_s=(float(np.percentile(mlat, 99))
+                               if mlat is not None else 0.0))
         return ServerMetrics(
             steps=steps,
             submitted=self._counts["submitted"],
@@ -662,9 +772,10 @@ class Server:
                         if self._ttfe else 0.0),
             ttfe_p99_s=(float(np.percentile(self._ttfe, 99))
                         if self._ttfe else 0.0),
+            per_model=per_model,
         )
 
 
 __all__ = ["BasecallRequest", "LMRequest", "ServeEvent", "ServeResult",
-           "ServeFuture", "ServerMetrics", "Server", "EngineProtocol",
-           "QueueFull", "BACKPRESSURE_POLICIES"]
+           "ServeFuture", "ServerMetrics", "ModelMetrics", "Server",
+           "EngineProtocol", "QueueFull", "BACKPRESSURE_POLICIES"]

@@ -73,6 +73,12 @@ class BasecallEngine:
             ``batch_slots * dp_size`` lanes and each step's window batch
             is split over the mesh's data-parallel devices; without a
             mesh this is the total lane count (dp = 1).
+        model_id: optional hosted-model name.  When set, requests naming a
+            DIFFERENT ``model=`` resolve with a clear ``"error"`` result
+            at submit instead of silently running the wrong weights, and
+            the Server's per-model metrics key on it.  (Multi-model
+            hosting lives in ``serve.multitenant.MultiModelBasecallEngine``;
+            this keeps single-model fleets honestly routable.)
 
     Example::
 
@@ -82,8 +88,9 @@ class BasecallEngine:
     """
 
     def __init__(self, pipeline: BasecallPipeline, params=None,
-                 batch_slots: int = 8):
+                 batch_slots: int = 8, model_id: Optional[str] = None):
         self.pipe = pipeline
+        self.model_id = model_id
         if params is None and pipeline.params is None:
             raise ValueError("BasecallEngine needs initialized params")
         # slot capacity scales with the ambient mesh: batch_slots lanes
@@ -103,6 +110,17 @@ class BasecallEngine:
                               np.float32)
         self.steps = 0
 
+    @classmethod
+    def from_registry(cls, registry, model_id: str,
+                      **kw) -> "BasecallEngine":
+        """A single-model engine serving a ``ModelRegistry`` tenant: the
+        registry's cached packed artifact (quantize-once, re-packed
+        bitwise-identically after eviction) plus its pipeline, with
+        ``model_id`` routing installed."""
+        pipe = registry.pipeline(model_id)
+        return cls(pipe, params=registry.artifact(model_id),
+                   model_id=model_id, **kw)
+
     def _mesh_ctx(self):
         """The construction-time mesh, re-installed around device calls so
         the jitted decode traces with its sharding constraints no matter
@@ -113,11 +131,28 @@ class BasecallEngine:
     # -- EngineProtocol request adapters -----------------------------------
     event_kind = "window"
 
+    def model_of(self, r) -> Optional[str]:
+        """The model id serving ``r`` (its ``model=``, or this engine's)."""
+        return getattr(r, "model", None) or self.model_id
+
+    def validate(self, r) -> Optional[str]:
+        """Requests routed to a model this engine does not host get a
+        clear ``"error"`` result at submit."""
+        m = getattr(r, "model", None)
+        if m is not None and m != self.model_id:
+            hosts = (f"[{self.model_id!r}]" if self.model_id is not None
+                     else "one anonymous model (no model= routing)")
+            return f"unknown model {m!r}: this server hosts {hosts}"
+        return None
+
     def make_request(self, rid: int, r) -> ReadRequest:
         return ReadRequest(rid=rid, signal=np.asarray(r.signal))
 
     def degenerate(self, r) -> bool:
-        """A zero-length signal chunks to zero windows: nothing to decode."""
+        """A zero-length signal chunks to zero windows: nothing to decode
+        (misrouted models are never degenerate: ``validate`` errors them)."""
+        if self.validate(r) is not None:
+            return False
         return np.asarray(r.signal).shape[0] == 0
 
     def empty_result(self, r) -> BasecallResult:

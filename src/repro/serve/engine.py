@@ -98,13 +98,19 @@ class ServingEngine:
             ``B * ceil(max_len / kv_block)``; smaller values trade
             worst-case capacity for more lanes per byte (preemption
             keeps overflow correct).
+        model_id: optional hosted-model name; requests naming a different
+            ``model=`` resolve with a clear ``"error"`` result at submit,
+            and the Server's per-model metrics key on it.  Set by
+            :meth:`from_registry` for registry-backed fleets.
     """
 
     def __init__(self, params, cfg: lm_lib.LMConfig, batch_slots: int = 8,
                  max_len: int = 256, pack: bool = True,
                  kv_layout: str = "dense", kv_block: int = 16,
-                 kv_blocks: Optional[int] = None):
+                 kv_blocks: Optional[int] = None,
+                 model_id: Optional[str] = None):
         assert cfg.embed_inputs, "engine serves token models"
+        self.model_id = model_id
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(f"unknown kv_layout {kv_layout!r}; "
                              f"one of {KV_LAYOUTS}")
@@ -228,6 +234,19 @@ class ServingEngine:
 
         self._fold = jax.jit(fold_prompt, donate_argnums=(1,))
 
+    @classmethod
+    def from_registry(cls, registry, model_id: str, **kw) -> "ServingEngine":
+        """Serve a ``ModelRegistry`` LM tenant: consumes the registry's
+        cached ``(packed params, serving config)`` artifact (built by
+        ``register_lm`` via ``pack_lm_serving`` — quantize-once, so this
+        is bitwise-identical to constructing with ``pack=True`` from the
+        float checkpoint) and installs ``model_id`` routing."""
+        if registry.kind(model_id) != "lm":
+            raise TypeError(f"model {model_id!r} is kind "
+                            f"{registry.kind(model_id)!r}, not an lm")
+        packed, scfg = registry.artifact(model_id)
+        return cls(packed, scfg, pack=False, model_id=model_id, **kw)
+
     # -- device placement --------------------------------------------------
     def _mesh_ctx(self):
         """The construction-time mesh, re-installed around device calls so
@@ -283,10 +302,18 @@ class ServingEngine:
         return Request(rid=rid, prompt=np.asarray(r.prompt, np.int32),
                        max_tokens=r.max_tokens, eos_id=r.eos_id)
 
+    def model_of(self, r) -> Optional[str]:
+        """The model id serving ``r`` (its ``model=``, or this engine's)."""
+        return getattr(r, "model", None) or self.model_id
+
     def degenerate(self, r) -> bool:
         """Nothing to decode: a zero/negative token budget or an empty
         prompt (no last token to feed the first step) — admitted lanes
-        would wedge or crash, so the server completes these inline."""
+        would wedge or crash, so the server completes these inline.
+        Misrouted models are never degenerate: ``validate`` errors them."""
+        m = getattr(r, "model", None)
+        if m is not None and m != self.model_id:
+            return False
         return r.max_tokens <= 0 or np.asarray(r.prompt).shape[0] == 0
 
     def empty_result(self, r) -> List[int]:
@@ -303,8 +330,15 @@ class ServingEngine:
         requests larger than one arena partition (they could never admit,
         deadlocking the FIFO queue head).
 
-        Returns an error message, or None when the request is servable.
+        Requests naming a model this engine does not host are rejected
+        the same way (clear ``"error"`` result, never a wrong-weights
+        decode).  Returns an error message, or None when servable.
         """
+        m = getattr(r, "model", None)
+        if m is not None and m != self.model_id:
+            hosts = (f"[{self.model_id!r}]" if self.model_id is not None
+                     else "one anonymous model (no model= routing)")
+            return f"unknown model {m!r}: this server hosts {hosts}"
         P = int(np.asarray(r.prompt).shape[0])
         total = P + int(r.max_tokens)
         if self.cfg.window:

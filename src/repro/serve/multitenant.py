@@ -1,0 +1,268 @@
+"""Multi-tenant base-calling engine: one Server, a fleet of models.
+
+``MultiModelBasecallEngine`` hosts several packed basecaller artifacts
+behind ONE :class:`~repro.serve.api.Server`: each hosted model owns a
+contiguous SLOT GROUP in a single shared
+:class:`~repro.serve.scheduler.SlotScheduler` (admission, occupancy and —
+for paged engines — KV partitions never cross a group boundary), requests
+carry a ``model=`` id that routes them to their model's lanes, and every
+engine step runs each active model's own jitted decode on its group's
+fixed-size sub-batch.  Batch-invariant numerics make that sub-batch
+decode bitwise-identical to the model's standalone
+``pipeline.basecall`` — multiplexing is free of accuracy drift by
+construction, and the tests pin it.
+
+Artifacts come from a :class:`~repro.serve.registry.ModelRegistry`
+(quantize-once, LRU under a byte budget): the engine pins a model's
+artifact only around its decode call and registers a use hook reporting
+"this model has active lanes", so a cold tenant can be evicted and
+re-packed on demand without a live one ever losing its weights mid-read.
+
+This is the RUBICON deployment scenario — a *framework* over many
+basecaller architectures — and the substrate for speed/accuracy tiering
+(small model for ReadUntil triage, large model for final calls; see
+docs/serving.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding as shd
+from repro.pipeline import chunking
+from repro.pipeline.pipeline import BasecallResult
+from repro.serve.basecall_engine import ReadRequest, _WindowView
+from repro.serve.registry import ModelRegistry
+from repro.serve.scheduler import SlotScheduler
+
+
+@dataclasses.dataclass
+class TenantReadRequest(ReadRequest):
+    """A :class:`~repro.serve.basecall_engine.ReadRequest` stamped with
+    the hosted model id that owns its lane."""
+    model: str = ""
+
+
+class MultiModelBasecallEngine:
+    """Continuous-batching step-executor multiplexing several basecallers.
+
+    Args:
+        registry: the :class:`ModelRegistry` holding every tenant
+            (``register_basecaller`` must have bound each hosted id).
+        models: the hosted model ids — a sequence (every model gets
+            ``batch_slots`` lanes per dp device) or an ordered mapping
+            ``id -> lanes per device`` for asymmetric tiers (many small-
+            model lanes for triage, a few large-model lanes for final
+            calls).
+        batch_slots: default lanes **per dp device** per model; under an
+            ambient ``dist.sharding.use_mesh`` mesh each model's group is
+            ``lanes * dp_size`` wide and its sub-batch is split over the
+            mesh, exactly like the single-model ``BasecallEngine``.
+        default_model: where requests without a ``model=`` go (first
+            hosted id by default).
+
+    Requests naming a model this engine does not host resolve with a
+    clear ``"error"`` result at submit (``validate``); they never occupy
+    a lane or touch another tenant's group.
+
+    Example::
+
+        reg = ModelRegistry()
+        reg.register_basecaller("small", small_pipe)
+        reg.register_basecaller("large", large_pipe)
+        srv = Server(MultiModelBasecallEngine(reg, ["small", "large"]))
+        fut = srv.submit(BasecallRequest(signal=sig, model="large"))
+    """
+
+    event_kind = "window"
+
+    def __init__(self, registry: ModelRegistry,
+                 models: Union[Sequence[str], Mapping[str, int]],
+                 batch_slots: int = 4, default_model: Optional[str] = None):
+        spec: Dict[str, int] = (
+            dict(models) if isinstance(models, Mapping)
+            else {m: batch_slots for m in models})
+        if not spec:
+            raise ValueError("MultiModelBasecallEngine hosts >= 1 model")
+        self.registry = registry
+        self.mesh = shd.get_mesh()
+        self.dp = shd.dp_size(self.mesh)
+        self.models: Tuple[str, ...] = tuple(spec)
+        self.default_model = default_model or self.models[0]
+        if self.default_model not in spec:
+            raise ValueError(f"default_model {self.default_model!r} is not "
+                             f"hosted ({list(spec)})")
+        self._pipes = {}
+        groups: Dict[str, int] = {}
+        for mid, lanes in spec.items():
+            pipe = registry.pipeline(mid)    # raises for unknown/non-basecall
+            self._pipes[mid] = pipe
+            groups[mid] = lanes * self.dp
+        self.B = sum(groups.values())
+        self.sched: SlotScheduler[TenantReadRequest] = SlotScheduler(
+            self.B, slot_groups=groups)
+        self._zero = {
+            mid: np.zeros((p.chunk.window, p.mcfg.in_channels), np.float32)
+            for mid, p in self._pipes.items()}
+        self.steps = 0
+        # in-flight tenants are never evicted from the registry: lanes are
+        # the ground truth, so there is no per-lane pin to leak on cancel
+        registry.add_use_hook(self._model_in_flight)
+
+    def _model_in_flight(self, mid: str) -> bool:
+        if mid not in self._pipes:
+            return False
+        rng = self.sched.group_range(mid)
+        return any(self.sched.slots[s] is not None for s in rng)
+
+    def _mesh_ctx(self):
+        return shd.use_mesh(self.mesh)
+
+    # -- EngineProtocol request adapters -----------------------------------
+    def model_of(self, r) -> str:
+        """The hosted id serving request ``r`` (its ``model=``, or the
+        engine default) — also the Server's per-model metrics key."""
+        return getattr(r, "model", None) or self.default_model
+
+    def validate(self, r):
+        """Unknown model ids resolve as a clear ``"error"`` at submit."""
+        mid = self.model_of(r)
+        if mid not in self._pipes:
+            return (f"unknown model {mid!r}: this server hosts "
+                    f"{sorted(self._pipes)}")
+        return None
+
+    def make_request(self, rid: int, r) -> TenantReadRequest:
+        return TenantReadRequest(rid=rid, signal=np.asarray(r.signal),
+                                 model=self.model_of(r))
+
+    def degenerate(self, r) -> bool:
+        """Zero-length signals of a HOSTED model decode to nothing; an
+        unknown model is never degenerate (``validate`` must error it)."""
+        if self.model_of(r) not in self._pipes:
+            return False
+        return np.asarray(r.signal).shape[0] == 0
+
+    def empty_result(self, r) -> BasecallResult:
+        pipe = self._pipes.get(self.model_of(r),
+                               self._pipes[self.default_model])
+        return BasecallResult.empty(pipe.max_read_len)
+
+    def progress(self, native: TenantReadRequest) -> "_WindowView":
+        return _WindowView(native)
+
+    def result_of(self, native: TenantReadRequest) -> BasecallResult:
+        assert native.result is not None
+        return native.result
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: TenantReadRequest):
+        """Queue ``req`` (engine-direct callers get the same unknown-model
+        guard the Server applies via ``validate``)."""
+        err = self.validate(req)
+        if err is not None:
+            raise ValueError(err)
+        self.sched.submit(req)
+
+    def _admit_one(self, slot: int, req: TenantReadRequest):
+        pipe = self._pipes[req.model]
+        req.windows = chunking.chunk_signal(req.signal, pipe.chunk)
+        req.frame_lengths = pipe.window_logit_lengths(
+            np.asarray(req.signal).shape[0])
+        req.cursor = 0
+
+    def admit(self) -> List[int]:
+        """Admit queued reads into their OWN model's lanes (per-group FIFO
+        with per-group head-of-line blocking — a full tenant never stalls
+        another tenant's admissions)."""
+        admitted = self.sched.admit(self._admit_one,
+                                    group_fn=lambda r: r.model)
+        for slot in admitted:
+            req = self.sched.slots[slot]
+            if req is not None and req.windows.shape[0] == 0:
+                self._finalize(req)
+                self.sched.retire(slot, req.rid)
+        return admitted
+
+    # -- stepping ----------------------------------------------------------
+    def active_mask(self) -> np.ndarray:
+        return self.sched.active_mask()
+
+    def model_occupancy(self) -> Dict[str, float]:
+        """Per hosted model: fraction of ITS lanes occupied right now
+        (the Server accumulates this into per-model ``metrics()`` rows)."""
+        return {mid: self.sched.occupancy(group=mid) for mid in self.models}
+
+    def device_occupancy(self) -> np.ndarray:
+        """(dp,) per-device occupancy.  Every model's group is lane-major
+        over the dp devices independently, so the per-device load is the
+        mean of each group's own dp-fold — not one pool-wide reshape."""
+        mask = self.sched.active_mask()
+        occ = np.zeros((self.dp,))
+        for mid in self.models:
+            rng = self.sched.group_range(mid)
+            occ += mask[rng.start:rng.stop].reshape(self.dp, -1).mean(axis=1)
+        return occ / len(self.models)
+
+    def _artifact(self, mid: str):
+        pipe = self._pipes[mid]
+        art = self.registry.artifact(mid)
+        if self.mesh is not None:
+            art = pipe._place_params(art, self.mesh)
+        return art
+
+    def step(self):
+        """One window of decode for every occupied lane, model by model:
+        each active tenant's group sub-batch (idle lanes zero-filled, so
+        the batch shape — and the jit trace — is fixed per model) runs
+        through that tenant's OWN jitted decode with its own artifact,
+        pinned in the registry for the duration of the call."""
+        for mid in self.models:
+            rng = self.sched.group_range(mid)
+            lanes = [self.sched.slots[s] for s in rng]
+            if not any(r is not None for r in lanes):
+                continue
+            pipe = self._pipes[mid]
+            zero = self._zero[mid]
+            batch = np.stack([
+                r.windows[r.cursor] if r is not None else zero
+                for r in lanes])
+            frames = np.asarray([
+                r.frame_lengths[r.cursor] if r is not None else 0
+                for r in lanes], np.int32)
+            with self.registry.pinned(mid):
+                art = self._artifact(mid)
+                batch, frames = jnp.asarray(batch), jnp.asarray(frames)
+                if self.mesh is not None:
+                    batch = jax.device_put(
+                        batch, shd.batch_sharding(self.mesh, batch.ndim))
+                    frames = jax.device_put(
+                        frames, shd.batch_sharding(self.mesh, frames.ndim))
+                with self._mesh_ctx():
+                    reads, lens, _scores = pipe._decode_windows(
+                        art, batch, frames)
+            reads, lens = np.asarray(reads), np.asarray(lens)
+            for i, slot in enumerate(rng):
+                req = self.sched.slots[slot]
+                if req is None:
+                    continue
+                req.reads.append(reads[i])
+                req.lengths.append(int(lens[i]))
+                req.cursor += 1
+                if req.cursor >= req.windows.shape[0]:
+                    self._finalize(req)
+                    self.sched.retire(slot, req.rid)
+        self.steps += 1
+
+    def _finalize(self, req: TenantReadRequest):
+        pipe = self._pipes[req.model]
+        if not req.reads:                      # zero-window (empty) signal
+            req.result = BasecallResult.empty(pipe.max_read_len)
+            return
+        req.result = BasecallResult.from_window_reads(
+            np.stack(req.reads), np.asarray(req.lengths, np.int32),
+            max_read_len=pipe.max_read_len)

@@ -1,0 +1,345 @@
+"""Multi-tenant model registry: packed serving artifacts behind one budget.
+
+A :class:`ModelRegistry` maps model ids to quantize-once serving
+artifacts — basecaller :class:`~repro.models.basecaller.PackedParams` and
+LM ``pack_lm_serving`` bundles alike.  Registration stores only the
+*recipe* (the retained float source plus a deterministic pack closure);
+the packed artifact itself is built lazily, cached under an LRU policy
+with an explicit byte budget, evicted cold, and re-packed on demand.
+Because every pack closure is jitted and deterministic, a re-packed
+artifact is bitwise identical to the one evicted — recall never changes
+serving results.
+
+Eviction never yanks an artifact out from under a live request: an entry
+is IN USE while it is pinned (:meth:`ModelRegistry.pin` /
+:meth:`ModelRegistry.pinned`) or while any registered use hook —
+multi-tenant engines install one reporting "this model has active
+lanes" — says so.  Evicting an in-use model is *deferred*, not dropped:
+the entry is flagged and reclaimed at the next registry operation after
+it falls idle.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Iterator, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def tree_nbytes(tree: Any) -> int:
+    """Total bytes of every array leaf in ``tree`` (non-array leaves —
+    configs, Python scalars — are free)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        dt = getattr(leaf, "dtype", None)
+        size = getattr(leaf, "size", None)
+        if dt is not None and size is not None:
+            total += int(size) * np.dtype(dt).itemsize
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class RegistryStats:
+    """One snapshot of :meth:`ModelRegistry.stats`.
+
+    ``builds`` counts every artifact pack (first build + re-packs);
+    ``rebuilds`` counts only the re-packs after an eviction; ``deferred``
+    is how many resident entries currently carry a deferred-eviction
+    flag (in use when eviction was requested)."""
+    models: int
+    resident: int
+    resident_bytes: int
+    budget_bytes: Optional[int]
+    hits: int
+    builds: int
+    rebuilds: int
+    evictions: int
+    deferred: int
+
+    def rows(self, prefix: str = "registry") -> List[Tuple[str, float]]:
+        """Flat ``(name, value)`` rows for benchmark CSV emission."""
+        out = [(f"{prefix}/models", float(self.models)),
+               (f"{prefix}/resident", float(self.resident)),
+               (f"{prefix}/resident_bytes", float(self.resident_bytes)),
+               (f"{prefix}/hits", float(self.hits)),
+               (f"{prefix}/builds", float(self.builds)),
+               (f"{prefix}/rebuilds", float(self.rebuilds)),
+               (f"{prefix}/evictions", float(self.evictions))]
+        if self.budget_bytes is not None:
+            out.append((f"{prefix}/budget_bytes", float(self.budget_bytes)))
+        return out
+
+
+@dataclasses.dataclass
+class _Entry:
+    model_id: str
+    kind: str
+    pack: Callable[[], Any]
+    meta: Any = None
+    artifact: Any = None
+    nbytes: int = 0
+    pins: int = 0
+    ever_built: bool = False
+    evict_deferred: bool = False    # budget pressure hit an in-use entry
+    evict_requested: bool = False   # explicit evict() hit an in-use entry
+
+
+class ModelRegistry:
+    """Model ids -> packed serving artifacts, under an LRU byte budget.
+
+    Args:
+        budget_bytes: resident-artifact budget.  ``None`` (default) means
+            unbounded.  The budget bounds COLD artifacts: entries that are
+            in use (pinned, or reported active by a use hook) are never
+            evicted, so a burst of simultaneously-live models may
+            transiently exceed it — each carries a deferred-eviction flag
+            and is reclaimed once idle.
+
+    Example::
+
+        reg = ModelRegistry(budget_bytes=64 << 20)
+        reg.register_basecaller("small", small_pipe)
+        reg.register_basecaller("large", large_pipe)
+        art = reg.artifact("small")        # packs on first touch
+        reg.evict("small")                 # cold -> dropped
+        assert reg.artifact("small") ...   # re-packed, bitwise identical
+    """
+
+    def __init__(self, budget_bytes: Optional[int] = None):
+        if budget_bytes is not None and budget_bytes <= 0:
+            raise ValueError(f"budget_bytes must be positive, got "
+                             f"{budget_bytes}")
+        self.budget_bytes = budget_bytes
+        self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
+        self._lru: "OrderedDict[str, None]" = OrderedDict()  # oldest first
+        self._use_hooks: List[Callable[[str], bool]] = []
+        self.hits = 0
+        self.builds = 0
+        self.rebuilds = 0
+        self.evictions = 0
+
+    # -- registration ------------------------------------------------------
+    def register(self, model_id: str, pack: Callable[[], Any], *,
+                 kind: str = "custom", meta: Any = None,
+                 replace: bool = False) -> None:
+        """Bind ``model_id`` to a deterministic ``pack()`` closure.
+
+        ``pack`` must rebuild the artifact bitwise-identically on every
+        call (jitted quantize-once packers qualify) — that is what makes
+        evict -> re-pack transparent to serving results.  ``meta`` rides
+        along for engine construction (the pipeline for basecallers, the
+        config for LMs)."""
+        if not isinstance(model_id, str) or not model_id:
+            raise ValueError(f"model_id must be a non-empty str, got "
+                             f"{model_id!r}")
+        if model_id in self._entries and not replace:
+            raise ValueError(f"model {model_id!r} already registered "
+                             "(pass replace=True to rebind)")
+        if model_id in self._lru:
+            self._drop(model_id)
+        self._entries[model_id] = _Entry(model_id=model_id, kind=kind,
+                                         pack=pack, meta=meta)
+
+    def register_basecaller(self, model_id: str, pipeline: Any,
+                            params: Any = None, *,
+                            replace: bool = False) -> None:
+        """Register a :class:`~repro.pipeline.BasecallPipeline` tenant.
+
+        Retains the float ``params`` (``pipeline.params`` by default) as
+        the re-pack source; the artifact is
+        ``pipeline.pack_artifact(params)`` — the same quantize-once
+        ``PackedParams`` the standalone pipeline serves from, so routing
+        through the registry is bitwise-identical to ``pipeline.basecall``.
+        """
+        p = params if params is not None else pipeline.params
+        if p is None:
+            raise ValueError(
+                f"model {model_id!r}: pipeline holds no params - call "
+                "init_params()/load first or pass params=")
+        self.register(model_id, lambda: pipeline.pack_artifact(p),
+                      kind="basecaller", meta=pipeline, replace=replace)
+
+    def register_lm(self, model_id: str, params: Any, cfg: Any, *,
+                    replace: bool = False) -> None:
+        """Register an LM tenant; the artifact is the
+        ``(packed params, serving config)`` pair from
+        :func:`repro.models.lm.pack_lm_serving` (consumed by
+        ``ServingEngine.from_registry``)."""
+        from repro.models import lm as lm_lib
+        self.register(model_id, lambda: lm_lib.pack_lm_serving(params, cfg),
+                      kind="lm", meta=cfg, replace=replace)
+
+    # -- lookup ------------------------------------------------------------
+    def __contains__(self, model_id: object) -> bool:
+        return model_id in self._entries
+
+    def ids(self) -> Tuple[str, ...]:
+        """Registered model ids, in registration order."""
+        return tuple(self._entries)
+
+    def kind(self, model_id: str) -> str:
+        """The registered kind of ``model_id`` (``"basecaller"``/``"lm"``/
+        custom)."""
+        return self._entry(model_id).kind
+
+    def meta(self, model_id: str) -> Any:
+        """The metadata object registered with ``model_id``."""
+        return self._entry(model_id).meta
+
+    def pipeline(self, model_id: str) -> Any:
+        """The ``BasecallPipeline`` behind a basecaller tenant."""
+        e = self._entry(model_id)
+        if e.kind != "basecaller":
+            raise TypeError(f"model {model_id!r} is kind {e.kind!r}, not a "
+                            "basecaller")
+        return e.meta
+
+    def _entry(self, model_id: str) -> _Entry:
+        try:
+            return self._entries[model_id]
+        except KeyError:
+            raise KeyError(f"unknown model {model_id!r}: registered ids are "
+                           f"{list(self._entries)}") from None
+
+    # -- the artifact cache ------------------------------------------------
+    def artifact(self, model_id: str) -> Any:
+        """The packed artifact for ``model_id`` — cache hit, or pack (and
+        count a rebuild if this entry was evicted before).  Touching an
+        entry makes it most-recently-used and clears any deferred-eviction
+        flag (it is hot again); colder entries are then evicted down to
+        the byte budget."""
+        self._sweep_deferred()
+        e = self._entry(model_id)
+        if e.artifact is None:
+            e.artifact = e.pack()
+            e.nbytes = tree_nbytes(e.artifact)
+            self.builds += 1
+            if e.ever_built:
+                self.rebuilds += 1
+            e.ever_built = True
+        else:
+            self.hits += 1
+        e.evict_deferred = False      # hot again: deferred evictions lapse
+        e.evict_requested = False
+        self._lru[model_id] = None
+        self._lru.move_to_end(model_id)
+        self._evict_to_budget(keep=model_id)
+        return e.artifact
+
+    @property
+    def resident_bytes(self) -> int:
+        """Bytes held by resident artifacts right now."""
+        return sum(self._entries[mid].nbytes for mid in self._lru)
+
+    def resident(self) -> Tuple[str, ...]:
+        """Resident model ids, least-recently-used first."""
+        return tuple(self._lru)
+
+    def evict(self, model_id: str, force: bool = False) -> bool:
+        """Drop ``model_id``'s resident artifact (the recipe stays; the
+        next :meth:`artifact` re-packs bitwise-identically).  Returns True
+        when dropped now.  An IN-USE entry is not dropped: the eviction is
+        deferred (flagged, reclaimed once idle) unless ``force=True``."""
+        e = self._entry(model_id)
+        if e.artifact is None:
+            return False
+        if not force and self._in_use(model_id):
+            e.evict_requested = True
+            return False
+        self._drop(model_id)
+        return True
+
+    def sweep(self) -> None:
+        """Reclaim deferred evictions whose entries have fallen idle and
+        re-enforce the byte budget (engines trigger this implicitly via
+        :meth:`artifact`; callers between bursts may call it directly)."""
+        self._sweep_deferred()
+        self._evict_to_budget()
+
+    # -- in-use protection -------------------------------------------------
+    def pin(self, model_id: str) -> None:
+        """Refcount ``model_id`` as in use (never evicted while pinned)."""
+        self._entry(model_id).pins += 1
+
+    def unpin(self, model_id: str) -> None:
+        """Drop one pin; reclaims any deferred eviction once idle."""
+        e = self._entry(model_id)
+        if e.pins <= 0:
+            raise RuntimeError(f"unpin of unpinned model {model_id!r}")
+        e.pins -= 1
+        self._sweep_deferred()
+
+    @contextlib.contextmanager
+    def pinned(self, model_id: str) -> Iterator[None]:
+        """``with reg.pinned(mid):`` — pin for the duration of a step."""
+        self.pin(model_id)
+        try:
+            yield
+        finally:
+            self.unpin(model_id)
+
+    def add_use_hook(self, hook: Callable[[str], bool]) -> None:
+        """Register ``hook(model_id) -> bool`` consulted before eviction;
+        engines report "this model has active lanes" so in-flight models
+        are never evicted (deferred instead) without any per-lane pin
+        bookkeeping to leak."""
+        self._use_hooks.append(hook)
+
+    def _in_use(self, model_id: str) -> bool:
+        if self._entries[model_id].pins > 0:
+            return True
+        return any(hook(model_id) for hook in self._use_hooks)
+
+    # -- internals ---------------------------------------------------------
+    def _drop(self, model_id: str) -> None:
+        e = self._entries[model_id]
+        e.artifact = None
+        e.nbytes = 0
+        e.evict_deferred = False
+        e.evict_requested = False
+        del self._lru[model_id]
+        self.evictions += 1
+
+    def _sweep_deferred(self) -> None:
+        # oldest first; explicit evict() requests always land once idle,
+        # budget-pressure deferrals only while the budget is still blown
+        # (they lapse when residency recovered some other way)
+        for mid in list(self._lru):
+            e = self._entries[mid]
+            if self._in_use(mid):
+                continue
+            if e.evict_requested:
+                self._drop(mid)
+            elif e.evict_deferred:
+                if (self.budget_bytes is not None
+                        and self.resident_bytes > self.budget_bytes):
+                    self._drop(mid)
+                else:
+                    e.evict_deferred = False
+
+    def _evict_to_budget(self, keep: Optional[str] = None) -> None:
+        if self.budget_bytes is None:
+            return
+        for mid in list(self._lru):  # oldest first
+            if self.resident_bytes <= self.budget_bytes:
+                return
+            if mid == keep or self._in_use(mid):
+                self._entries[mid].evict_deferred = True
+                continue
+            self._drop(mid)
+
+    def stats(self) -> RegistryStats:
+        """Cache counters + residency snapshot (see :class:`RegistryStats`)."""
+        deferred = sum(1 for mid in self._lru
+                       if self._entries[mid].evict_deferred
+                       or self._entries[mid].evict_requested)
+        return RegistryStats(models=len(self._entries),
+                             resident=len(self._lru),
+                             resident_bytes=self.resident_bytes,
+                             budget_bytes=self.budget_bytes,
+                             hits=self.hits, builds=self.builds,
+                             rebuilds=self.rebuilds,
+                             evictions=self.evictions, deferred=deferred)

@@ -14,7 +14,8 @@ what a "step of work" means belongs to the engine built on top:
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Generic, List, Optional, TypeVar
+from typing import (Callable, Dict, Generic, Hashable, List, Mapping,
+                    Optional, TypeVar)
 
 import numpy as np
 
@@ -41,9 +42,20 @@ class SlotScheduler(Generic[R]):
             dim sharded over dp devices, every lane's block-table gather
             stays device-local.  Must divide both ``kv_blocks`` and
             ``n_slots``.
+        slot_groups: optional ordered mapping of group id -> lane count,
+            carving the pool into contiguous, named SLOT GROUPS (multi-
+            tenant engines pass one group per hosted model).  Lane counts
+            must sum to ``n_slots``.  Admission never crosses a group
+            boundary (see :meth:`admit`'s ``group_fn``), per-group
+            occupancy is first-class (:meth:`occupancy` with ``group=``),
+            and with a paged arena every group must cover a whole number
+            of KV partitions so blocks never cross group boundaries
+            either.  ``None`` (the default) keeps the pool a single
+            anonymous group and changes nothing for existing engines.
     """
 
-    def __init__(self, n_slots: int, kv_blocks: int = 0, kv_groups: int = 1):
+    def __init__(self, n_slots: int, kv_blocks: int = 0, kv_groups: int = 1,
+                 slot_groups: Optional[Mapping[Hashable, int]] = None):
         self.n_slots = n_slots
         self.slots: List[Optional[R]] = [None] * n_slots
         self.queue: List[R] = []
@@ -61,6 +73,30 @@ class SlotScheduler(Generic[R]):
                           for g in range(kv_groups)]
         else:
             self._free = []
+        self.slot_groups: Dict[Hashable, int] = (
+            dict(slot_groups) if slot_groups else {None: n_slots})
+        if sum(self.slot_groups.values()) != n_slots:
+            raise ValueError(
+                f"slot_groups lane counts {dict(self.slot_groups)} must sum "
+                f"to n_slots={n_slots}")
+        self._group_lo: Dict[Hashable, int] = {}
+        self._slot_group: List[Hashable] = []
+        lo = 0
+        for gid, n in self.slot_groups.items():
+            if n < 1:
+                raise ValueError(f"slot group {gid!r} needs >= 1 lane")
+            self._group_lo[gid] = lo
+            self._slot_group.extend([gid] * n)
+            lo += n
+        if kv_blocks and len(self.slot_groups) > 1:
+            spp = n_slots // kv_groups  # slots per arena partition
+            for gid, n in self.slot_groups.items():
+                if self._group_lo[gid] % spp or n % spp:
+                    raise ValueError(
+                        f"slot group {gid!r} (lanes "
+                        f"[{self._group_lo[gid]}, {self._group_lo[gid] + n})) "
+                        f"does not cover whole KV partitions of {spp} slots "
+                        "- blocks would cross a group boundary")
 
     # -- the free-block allocator (paged KV arenas) ------------------------
     def group_of(self, slot: int) -> int:
@@ -105,6 +141,25 @@ class SlotScheduler(Generic[R]):
             self._free[g] = sorted(self._free[g] + self.slot_blocks[slot])
             self.slot_blocks[slot] = []
 
+    # -- slot groups (multi-tenant lane partitioning) ----------------------
+    def group_ids(self) -> tuple:
+        """The group ids, in declaration (= lane) order."""
+        return tuple(self.slot_groups)
+
+    def group_range(self, gid: Hashable) -> range:
+        """The contiguous lane range owned by group ``gid``."""
+        lo = self._group_lo[gid]
+        return range(lo, lo + self.slot_groups[gid])
+
+    def group_of_slot(self, slot: int) -> Hashable:
+        """The group id lane ``slot`` belongs to."""
+        return self._slot_group[slot]
+
+    def group_of_partition(self, partition: int) -> Hashable:
+        """The slot group KV arena ``partition`` serves (partitions are
+        validated at construction to never straddle a group boundary)."""
+        return self._slot_group[partition * (self.n_slots // self.kv_groups)]
+
     # -- admission ---------------------------------------------------------
     def submit(self, req: R) -> None:
         """Append ``req`` to the admission queue (FIFO; the server layers
@@ -112,7 +167,8 @@ class SlotScheduler(Generic[R]):
         self.queue.append(req)
 
     def admit(self, admit_fn: Callable[[int, R], None],
-              need_fn: Optional[Callable[[R], int]] = None) -> List[int]:
+              need_fn: Optional[Callable[[R], int]] = None,
+              group_fn: Optional[Callable[[R], Hashable]] = None) -> List[int]:
         """Fill free slots from the queue; ``admit_fn(slot, req)`` does the
         engine-specific lane setup.  Returns the slots admitted into.
 
@@ -120,28 +176,61 @@ class SlotScheduler(Generic[R]):
         at admission) a request is only placed into a slot whose arena
         partition can cover it, and the blocks are allocated BEFORE
         ``admit_fn`` runs so the engine can build the lane's block table.
-        Admission stays FIFO: when no free slot can host the queue head,
-        admission stops (head-of-line blocking) rather than starving it
-        behind smaller requests.
+
+        With a ``group_fn`` (multi-tenant engines: request -> slot group
+        id) a request is only placed into a lane of ITS OWN group, and
+        head-of-line blocking is per group: a request whose group has no
+        eligible free lane blocks everything queued BEHIND IT FOR THAT
+        GROUP, while other groups keep admitting past it.  Without
+        ``group_fn`` every request targets the sole (anonymous) group,
+        which degenerates to the classic global-FIFO behaviour: when no
+        free slot can host the queue head, admission stops rather than
+        starving it behind smaller requests.  ``group_fn`` is required
+        when more than one group was declared.
         """
-        admitted = []
-        free = [s for s in range(self.n_slots) if self.slots[s] is None]
-        while free and self.queue:
-            req = self.queue[0]
+        if group_fn is None and len(self.slot_groups) > 1:
+            raise ValueError(
+                "SlotScheduler has multiple slot groups "
+                f"{list(self.slot_groups)}; admit() needs a group_fn to "
+                "route requests")
+        default_gid = next(iter(self.slot_groups))
+        free: Dict[Hashable, List[int]] = {
+            gid: [s for s in self.group_range(gid) if self.slots[s] is None]
+            for gid in self.slot_groups}
+        admitted: List[int] = []
+        blocked: set = set()
+        i = 0
+        while i < len(self.queue):
+            req = self.queue[i]
+            gid = group_fn(req) if group_fn is not None else default_gid
+            if gid in blocked:
+                i += 1
+                continue
+            cand = free.get(gid)
+            if cand is None:
+                raise KeyError(
+                    f"request routed to unknown slot group {gid!r} "
+                    f"(groups: {list(self.slot_groups)})")
+            if not cand:
+                blocked.add(gid)
+                i += 1
+                continue
             if need_fn is None:
-                slot = free[0]
+                slot = cand[0]
             else:
                 need = need_fn(req)
-                slot = next((s for s in free if self.can_alloc(s, need)),
+                slot = next((s for s in cand if self.can_alloc(s, need)),
                             None)
                 if slot is None:
-                    break
+                    blocked.add(gid)
+                    i += 1
+                    continue
                 self.alloc_blocks(slot, need)
-            self.queue.pop(0)
+            self.queue.pop(i)
             admit_fn(slot, req)
             self.slots[slot] = req
             admitted.append(slot)
-            free.remove(slot)
+            cand.remove(slot)
         return admitted
 
     # -- state -------------------------------------------------------------
@@ -157,9 +246,14 @@ class SlotScheduler(Generic[R]):
         """True while anything is queued or in flight."""
         return bool(self.queue) or self.any_active()
 
-    def occupancy(self) -> float:
-        """Fraction of lanes occupied right now (0.0 - 1.0)."""
-        return float(self.active_mask().mean())
+    def occupancy(self, group: Hashable = None) -> float:
+        """Fraction of lanes occupied right now (0.0 - 1.0), pool-wide or
+        for one slot ``group``'s lanes."""
+        mask = self.active_mask()
+        if group is not None:
+            rng = self.group_range(group)
+            mask = mask[rng.start:rng.stop]
+        return float(mask.mean())
 
     def group_occupancy(self, groups: int) -> np.ndarray:
         """(groups,) mean occupancy per contiguous lane group.

@@ -462,6 +462,9 @@ class StreamRequest:
     chunks_per_step: Optional[int] = None
     priority: int = 0
     deadline: Optional[float] = None
+    #: hosted-model routing (multi-tenant fleets): a request naming a
+    #: model its engine does not serve resolves with a clear ``"error"``
+    model: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -517,8 +520,9 @@ class StreamingBasecallEngine:
     event_kind = "bases"
 
     def __init__(self, pipeline: BasecallPipeline, params=None,
-                 batch_slots: int = 8):
+                 batch_slots: int = 8, model_id: Optional[str] = None):
         self.pipe = pipeline
+        self.model_id = model_id
         if params is None and pipeline.params is None:
             raise ValueError("StreamingBasecallEngine needs initialized "
                              "params")
@@ -551,8 +555,18 @@ class StreamingBasecallEngine:
     def empty_result(self, r: StreamRequest) -> BasecallResult:
         return BasecallResult.empty(self.pipe.max_read_len)
 
+    def model_of(self, r) -> Optional[str]:
+        """The model id serving ``r`` (its ``model=``, or this engine's)."""
+        return getattr(r, "model", None) or self.model_id
+
     def validate(self, r: StreamRequest) -> Optional[str]:
-        """Reject malformed stream requests at submit, not mid-lane."""
+        """Reject malformed stream requests — and streams routed to a
+        model this engine does not host — at submit, not mid-lane."""
+        m = getattr(r, "model", None)
+        if m is not None and m != self.model_id:
+            hosts = (f"[{self.model_id!r}]" if self.model_id is not None
+                     else "one anonymous model (no model= routing)")
+            return f"unknown model {m!r}: this server hosts {hosts}"
         if not hasattr(r.chunks, "__iter__"):
             return f"chunks must be iterable, got {type(r.chunks).__name__}"
         if r.chunks_per_step is not None and r.chunks_per_step < 1:

@@ -26,6 +26,8 @@ from repro.serve import api  # noqa: E402
 from repro.serve import streaming  # noqa: E402
 from repro.serve.basecall_engine import BasecallEngine  # noqa: E402
 from repro.serve.engine import ServingEngine  # noqa: E402
+from repro.serve.multitenant import MultiModelBasecallEngine  # noqa: E402
+from repro.serve.registry import ModelRegistry, RegistryStats  # noqa: E402
 from repro.serve.scheduler import SlotScheduler  # noqa: E402
 
 PRESENT = {
@@ -83,8 +85,33 @@ PRESENT = {
     "ProvisionalBases": streaming.ProvisionalBases,
     "ScoreEjectPolicy": streaming.ScoreEjectPolicy,
     "apply_patches": streaming.apply_patches,
+    # multi-tenant fleets
+    "ModelRegistry": ModelRegistry,
+    "ModelRegistry.register": ModelRegistry.register,
+    "ModelRegistry.register_basecaller": ModelRegistry.register_basecaller,
+    "ModelRegistry.register_lm": ModelRegistry.register_lm,
+    "ModelRegistry.artifact": ModelRegistry.artifact,
+    "ModelRegistry.evict": ModelRegistry.evict,
+    "ModelRegistry.sweep": ModelRegistry.sweep,
+    "ModelRegistry.pin": ModelRegistry.pin,
+    "ModelRegistry.unpin": ModelRegistry.unpin,
+    "ModelRegistry.pinned": ModelRegistry.pinned,
+    "ModelRegistry.add_use_hook": ModelRegistry.add_use_hook,
+    "ModelRegistry.stats": ModelRegistry.stats,
+    "RegistryStats": RegistryStats,
+    "MultiModelBasecallEngine": MultiModelBasecallEngine,
+    "MultiModelBasecallEngine.model_occupancy":
+        MultiModelBasecallEngine.model_occupancy,
+    "MultiModelBasecallEngine.device_occupancy":
+        MultiModelBasecallEngine.device_occupancy,
+    "ServingEngine.from_registry": ServingEngine.from_registry,
+    "BasecallEngine.from_registry": BasecallEngine.from_registry,
+    "api.ModelMetrics": api.ModelMetrics,
     "SlotScheduler": SlotScheduler,
     "SlotScheduler.submit": SlotScheduler.submit,
+    "SlotScheduler.group_range": SlotScheduler.group_range,
+    "SlotScheduler.group_of_slot": SlotScheduler.group_of_slot,
+    "SlotScheduler.group_of_partition": SlotScheduler.group_of_partition,
     "SlotScheduler.admit": SlotScheduler.admit,
     "SlotScheduler.retire": SlotScheduler.retire,
     "SlotScheduler.release": SlotScheduler.release,
@@ -129,6 +156,8 @@ FULL = [
     "BasecallPipeline.stream",
     "StreamingSession",
     "StreamingBasecallEngine",
+    "ModelRegistry",
+    "MultiModelBasecallEngine",
     "registry.register_op",
     "registry.get_op",
     "sharding.use_mesh",

@@ -1,0 +1,571 @@
+"""Multi-tenant serving: routing, artifact caching, per-model isolation.
+
+The property suite pinning PR 10's fleet semantics:
+
+* grouped ``SlotScheduler`` — random admit/step/retire/cancel
+  interleavings over 3 model groups never leak a slot across a group
+  boundary, conserve requests per group, and keep KV blocks inside their
+  group's arena partitions;
+* ``ModelRegistry`` — hypothesis sweeps of artifact/pin/evict sequences
+  hold resident bytes to the byte budget, never evict an in-use
+  artifact (deferred instead), and re-pack bitwise-identically;
+* routing — ``Server.submit(model=m)`` is bitwise-identical to model
+  ``m``'s standalone ``pipe.basecall``, interleaved with other tenants,
+  after an LRU evict -> re-pack cycle, on the golden read, and under the
+  4-device host mesh;
+* metrics — per-model rows, atomic reset, unknown-model errors counted
+  once (error, never also a queue rejection).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+import jax  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.serve.api import BasecallRequest, LMRequest, Server  # noqa: E402
+from repro.serve.multitenant import MultiModelBasecallEngine  # noqa: E402
+from repro.serve.registry import ModelRegistry  # noqa: E402
+from repro.serve.scheduler import SlotScheduler  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_pipes():
+    """Two genuinely different tenants: a tiny Guppy and a tiny Chiron."""
+    from repro.pipeline import BasecallPipeline
+
+    def mk(preset, seed):
+        p = BasecallPipeline.from_preset(preset, scale="tiny",
+                                         backend="ref", beam_width=3)
+        p.init_params(jax.random.PRNGKey(seed))
+        return p
+
+    return {"small": mk("guppy", 0), "large": mk("chiron", 1)}
+
+
+def _registry(pipes, **kw):
+    reg = ModelRegistry(**kw)
+    for mid, p in pipes.items():
+        reg.register_basecaller(mid, p)
+    return reg
+
+
+def _server(pipes, batch_slots=2, **srv_kw):
+    reg = _registry(pipes)
+    eng = MultiModelBasecallEngine(reg, list(pipes), batch_slots=batch_slots)
+    return Server(eng, **srv_kw), reg, eng
+
+
+def _sig(pipe, rng, n_windows=2.5):
+    return rng.standard_normal(
+        int(n_windows * pipe.mcfg.input_len)).astype(np.float32)
+
+
+def _same_result(a, b):
+    return np.array_equal(a.read, b.read) and a.length == b.length
+
+
+# ---------------------------------------------------------------------------
+# grouped SlotScheduler: the interleaving property sweep
+# ---------------------------------------------------------------------------
+
+class _Tok:
+    __slots__ = ("rid", "gid")
+
+    def __init__(self, rid, gid):
+        self.rid, self.gid = rid, gid
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       paged=st.sampled_from([False, True]))
+def test_scheduler_group_interleaving_property(seed, paged):
+    """Random admit/retire/release/cancel interleavings over 3 model
+    groups: no slot leakage across groups, per-group request
+    conservation, KV blocks confined to the owning group's partitions."""
+    rng = np.random.default_rng(seed)
+    groups = {"a": 2, "b": 4, "c": 2}
+    kv_groups, kv_blocks = (4, 16) if paged else (1, 0)
+    sched = SlotScheduler(8, kv_blocks=kv_blocks, kv_groups=kv_groups,
+                          slot_groups=groups)
+    spp = 8 // kv_groups
+    submitted = {g: 0 for g in groups}
+    finished = {g: 0 for g in groups}
+    dropped = {g: 0 for g in groups}   # released or cancelled
+    next_rid = 0
+
+    def check():
+        # 1) no leakage: every occupied slot's request belongs to the
+        #    group owning that slot
+        for s, req in enumerate(sched.slots):
+            if req is not None:
+                assert sched.group_of_slot(s) == req.gid
+        # 2) per-group conservation
+        for g in groups:
+            active = sum(1 for s in sched.group_range(g)
+                         if sched.slots[s] is not None)
+            queued = sum(1 for q in sched.queue if q.gid == g)
+            pending_fin = sum(1 for q in sched.finished.values()
+                              if q.gid == g)
+            assert (active + queued + finished[g] + pending_fin
+                    + dropped[g]) == submitted[g], g
+        # 3) KV blocks never cross the owning group's partitions, and
+        #    nothing leaks (free + held == arena)
+        if kv_blocks:
+            held = 0
+            for s, blocks in enumerate(sched.slot_blocks):
+                held += len(blocks)
+                for b in blocks:
+                    assert (sched.group_of_partition(b // (kv_blocks
+                                                           // kv_groups))
+                            == sched.group_of_slot(s))
+                    assert sched.group_of(s) == b // (kv_blocks // kv_groups)
+            assert held + sched.free_blocks() == kv_blocks
+
+    need_fn = (lambda r: 1 + (r.rid % 2)) if paged else None
+    for _ in range(60):
+        op = rng.integers(0, 4)
+        if op == 0:                                        # submit
+            gid = ("a", "b", "c")[rng.integers(0, 3)]
+            sched.submit(_Tok(next_rid, gid))
+            submitted[gid] += 1
+            next_rid += 1
+        elif op == 1:                                      # admit
+            sched.admit(lambda slot, r: None, need_fn=need_fn,
+                        group_fn=lambda r: r.gid)
+        elif op == 2:                                      # retire/release
+            occupied = [s for s, r in enumerate(sched.slots)
+                        if r is not None]
+            if occupied:
+                s = occupied[rng.integers(0, len(occupied))]
+                req = sched.slots[s]
+                if rng.integers(0, 2):
+                    sched.retire(s, req.rid)
+                else:
+                    sched.release(s)
+                    dropped[req.gid] += 1
+        else:                                              # cancel / drain
+            if sched.queue and rng.integers(0, 2):
+                q = sched.queue[rng.integers(0, len(sched.queue))]
+                assert sched.cancel_queued(q)
+                dropped[q.gid] += 1
+            else:
+                for rid, req in sched.drain_finished().items():
+                    finished[req.gid] += 1
+        check()
+    # partitions must subdivide groups cleanly in the paged layout
+    if paged:
+        for g in groups:
+            rng_g = sched.group_range(g)
+            assert rng_g.start % spp == 0 and len(rng_g) % spp == 0
+
+
+def test_scheduler_group_validation():
+    # lane counts must sum to the pool
+    with pytest.raises(ValueError, match="sum"):
+        SlotScheduler(8, slot_groups={"a": 2, "b": 2})
+    # every group must cover whole KV partitions
+    with pytest.raises(ValueError, match="partition"):
+        SlotScheduler(8, kv_blocks=16, kv_groups=4,
+                      slot_groups={"a": 3, "b": 5})
+    # multiple groups need a group_fn at admit
+    s = SlotScheduler(4, slot_groups={"a": 2, "b": 2})
+    s.submit(_Tok(0, "a"))
+    with pytest.raises(ValueError, match="group_fn"):
+        s.admit(lambda slot, r: None)
+    # unknown group id surfaces, not silently mis-places
+    s.submit(_Tok(1, "zz"))
+    with pytest.raises(KeyError, match="zz"):
+        s.admit(lambda slot, r: None, group_fn=lambda r: r.gid)
+
+
+def test_scheduler_per_group_head_of_line():
+    """A full group blocks only ITS OWN queue tail; other groups admit
+    past it (the single-group case keeps classic global HOL blocking)."""
+    s = SlotScheduler(4, slot_groups={"a": 2, "b": 2})
+    for rid, gid in enumerate(["a", "a", "a", "b"]):
+        s.submit(_Tok(rid, gid))
+    got = s.admit(lambda slot, r: None, group_fn=lambda r: r.gid)
+    assert got == [0, 1, 2]        # both a-lanes + the b request behind
+    assert [q.gid for q in s.queue] == ["a"]
+    assert s.occupancy(group="a") == 1.0
+    assert s.occupancy(group="b") == 0.5
+    assert s.occupancy() == 0.75
+
+
+# ---------------------------------------------------------------------------
+# ModelRegistry: budget accounting property sweep
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_registry_budget_property(seed):
+    """Random artifact/pin/unpin/evict sequences: resident bytes stay at
+    or under the budget except for in-use (pinned/deferred) entries, a
+    pinned artifact is never dropped, rebuilds are value-identical."""
+    rng = np.random.default_rng(seed)
+    ids = [f"m{i}" for i in range(4)]
+    reg = ModelRegistry(budget_bytes=1200)
+    first_build = {}
+    for i, mid in enumerate(ids):
+        def pack(i=i, mid=mid):
+            return np.full(50 * (i + 1), i, np.float64)  # 400/800/1200/1600 B
+        reg.register(mid, pack)
+    pins = {mid: 0 for mid in ids}
+
+    def check():
+        over = reg.resident_bytes - 1200
+        if over > 0:
+            # every byte over budget is excused by an in-use entry
+            # (deferred eviction), never by a silently-ignored budget
+            excused = [mid for mid in reg.resident()
+                       if reg._entries[mid].pins > 0
+                       or reg._entries[mid].evict_deferred
+                       or reg._entries[mid].evict_requested]
+            assert excused, (reg.resident(), reg.resident_bytes)
+        for mid, n in pins.items():
+            if n > 0:
+                assert mid in reg.resident(), f"pinned {mid} evicted"
+
+    for _ in range(50):
+        mid = ids[rng.integers(0, len(ids))]
+        op = rng.integers(0, 4)
+        if op == 0:
+            art = reg.artifact(mid)
+            if mid in first_build:
+                assert np.array_equal(art, first_build[mid])
+            else:
+                first_build[mid] = np.array(art, copy=True)
+        elif op == 1:
+            if mid in reg.resident():
+                reg.pin(mid)
+                pins[mid] += 1
+        elif op == 2:
+            if pins[mid] > 0:
+                reg.unpin(mid)
+                pins[mid] -= 1
+        else:
+            reg.evict(mid)
+        check()
+    # drain: with every pin released, the budget must be enforceable
+    for mid, n in pins.items():
+        for _ in range(n):
+            reg.unpin(mid)
+    reg.sweep()
+    assert reg.resident_bytes <= 1200
+
+
+def test_registry_inflight_eviction_deferred_not_dropped():
+    reg = ModelRegistry(budget_bytes=500)
+    reg.register("hot", lambda: np.zeros(50, np.float64))    # 400 B
+    reg.register("cold", lambda: np.zeros(50, np.float64))
+    reg.artifact("hot")
+    reg.pin("hot")
+    # explicit evict of the in-use artifact: deferred, not dropped
+    assert reg.evict("hot") is False
+    assert "hot" in reg.resident()
+    # budget pressure from another tenant cannot drop it either
+    reg.artifact("cold")
+    assert "hot" in reg.resident()
+    assert reg.stats().deferred >= 1
+    # once idle, the deferral lands at the next registry operation
+    reg.unpin("hot")
+    assert "hot" not in reg.resident()
+    # the recipe survives eviction: the artifact comes back on demand
+    assert reg.artifact("hot") is not None
+    assert reg.stats().rebuilds >= 1
+
+
+def test_registry_lru_evicts_coldest():
+    reg = ModelRegistry(budget_bytes=900)                    # fits two
+    for mid in ("a", "b", "c"):
+        reg.register(mid, lambda mid=mid: np.zeros(50, np.float64))
+    reg.artifact("a")
+    reg.artifact("b")
+    reg.artifact("a")              # a is now hotter than b
+    reg.artifact("c")              # must evict b, the coldest
+    assert set(reg.resident()) == {"a", "c"}
+    with pytest.raises(KeyError, match="unknown model"):
+        reg.artifact("nope")
+
+
+def test_registry_bitwise_recall_real_artifacts(tiny_pipes):
+    """Evict -> re-pack returns a bitwise-identical artifact, for a
+    basecaller PackedParams and an LM pack_lm_serving bundle alike."""
+    from repro.core.quant import QuantConfig
+    from repro.models import lm as lm_lib
+
+    reg = _registry(tiny_pipes)
+    cfg = lm_lib.LMConfig(
+        n_layers=1, d_model=16, n_heads=2, n_kv_heads=2, d_ff=32,
+        vocab_size=32, quant=QuantConfig(enabled=True, bits_w=5, bits_a=5),
+        remat=False)
+    reg.register_lm("lm", lm_lib.init_lm(jax.random.PRNGKey(7), cfg), cfg)
+    for mid in ("small", "large", "lm"):
+        a1 = jax.tree_util.tree_leaves(reg.artifact(mid))
+        assert reg.evict(mid)
+        a2 = jax.tree_util.tree_leaves(reg.artifact(mid))
+        assert len(a1) == len(a2)
+        for l1, l2 in zip(a1, a2):
+            assert np.array_equal(np.asarray(l1), np.asarray(l2)), mid
+    assert reg.stats().rebuilds == 3
+
+
+# ---------------------------------------------------------------------------
+# routing: Server.submit(model=m) ≡ standalone pipe.basecall, bitwise
+# ---------------------------------------------------------------------------
+
+def test_routing_parity_interleaved(tiny_pipes):
+    srv, _, _ = _server(tiny_pipes)
+    rng = np.random.default_rng(3)
+    jobs = []
+    for i in range(3):
+        for mid, pipe in tiny_pipes.items():
+            sig = _sig(pipe, rng, n_windows=1.5 + i)
+            jobs.append((mid, sig,
+                         srv.submit(BasecallRequest(signal=sig, model=mid))))
+    srv.run_until_idle()
+    for mid, sig, fut in jobs:
+        got = fut.result()
+        assert got.status == "ok"
+        assert _same_result(got.value, tiny_pipes[mid].basecall(sig)), mid
+
+
+def test_routing_parity_after_evict_repack(tiny_pipes):
+    srv, reg, _ = _server(tiny_pipes)
+    rng = np.random.default_rng(4)
+    sigs = {mid: _sig(p, rng) for mid, p in tiny_pipes.items()}
+    for mid, pipe in tiny_pipes.items():
+        r1 = srv.submit(
+            BasecallRequest(signal=sigs[mid], model=mid)).result().value
+        assert reg.evict(mid), mid       # cold between requests -> dropped
+        r2 = srv.submit(
+            BasecallRequest(signal=sigs[mid], model=mid)).result().value
+        assert _same_result(r1, r2)
+        assert _same_result(r2, pipe.basecall(sigs[mid]))
+    assert reg.stats().rebuilds == len(tiny_pipes)
+
+
+def test_default_model_routing(tiny_pipes):
+    srv, _, eng = _server(tiny_pipes)
+    rng = np.random.default_rng(5)
+    sig = _sig(tiny_pipes[eng.default_model], rng)
+    res = srv.submit(BasecallRequest(signal=sig)).result()   # no model=
+    assert res.status == "ok"
+    assert _same_result(res.value,
+                        tiny_pipes[eng.default_model].basecall(sig))
+
+
+def test_routing_parity_golden_read(golden_pipeline, golden_read,
+                                    tiny_pipes):
+    """The acceptance bar: a Server hosting the golden demo model next to
+    a tiny tenant routes per-request and stays bitwise-identical to each
+    model's standalone pipeline on the golden read — including after an
+    LRU evict -> re-pack cycle."""
+    golden_pipe, _, _ = golden_pipeline
+    _, sig = golden_read
+    tenants = {"golden": golden_pipe, "tiny": tiny_pipes["large"]}
+    reg = ModelRegistry()
+    for mid, p in tenants.items():
+        reg.register_basecaller(mid, p)
+    srv = Server(MultiModelBasecallEngine(reg, list(tenants)))
+    for mid, pipe in tenants.items():
+        got = srv.submit(BasecallRequest(signal=sig, model=mid)).result()
+        assert got.status == "ok"
+        assert _same_result(got.value, pipe.basecall(sig)), mid
+    # evict BOTH artifacts; recall must reproduce the same reads
+    for mid in tenants:
+        assert reg.evict(mid)
+    for mid, pipe in tenants.items():
+        got = srv.submit(BasecallRequest(signal=sig, model=mid)).result()
+        assert _same_result(got.value, pipe.basecall(sig)), mid
+    assert reg.stats().rebuilds == 2
+
+
+def test_routing_parity_mesh4(tiny_pipes, host_mesh4):
+    """1-dev ≡ 4-dev: the multi-tenant engine under the host mesh returns
+    the same bits as each tenant's (single-device) standalone pipeline."""
+    from repro.dist import sharding as shd
+
+    reg = _registry(tiny_pipes)
+    with shd.use_mesh(host_mesh4):
+        eng = MultiModelBasecallEngine(reg, {"small": 2, "large": 1})
+    assert eng.dp == 4 and eng.B == 12
+    srv = Server(eng)
+    rng = np.random.default_rng(6)
+    jobs = []
+    for mid, pipe in tiny_pipes.items():
+        sig = _sig(pipe, rng)
+        jobs.append((mid, sig,
+                     srv.submit(BasecallRequest(signal=sig, model=mid))))
+    srv.run_until_idle()
+    for mid, sig, fut in jobs:
+        assert _same_result(fut.result().value,
+                            tiny_pipes[mid].basecall(sig)), mid
+    met = srv.metrics()
+    assert met.devices == 4 and len(met.occupancy_per_device) == 4
+
+
+# ---------------------------------------------------------------------------
+# metrics: per-model rows, atomic reset, errors counted once
+# ---------------------------------------------------------------------------
+
+def test_unknown_model_error_counted_once(tiny_pipes):
+    srv, _, _ = _server(tiny_pipes)
+    rng = np.random.default_rng(7)
+    sig = _sig(tiny_pipes["small"], rng)
+    res = srv.submit(BasecallRequest(signal=sig, model="nope")).result()
+    assert res.status == "error"
+    assert "unknown model" in res.error and "'nope'" in res.error
+    met = srv.metrics()
+    # counted ONCE: an error, never also a queue rejection
+    assert met.errors == 1 and met.rejected == 0
+    assert met.per_model["nope"].errors == 1
+    assert met.per_model["nope"].submitted == 1
+    # an unknown-model EMPTY signal is still an error, not an empty ok
+    res = srv.submit(BasecallRequest(signal=np.zeros((0,), np.float32),
+                                     model="nope")).result()
+    assert res.status == "error"
+    assert srv.metrics().errors == 2
+
+
+def test_per_model_metrics_rows_and_atomic_reset(tiny_pipes):
+    srv, _, _ = _server(tiny_pipes)
+    rng = np.random.default_rng(8)
+    for mid, pipe in tiny_pipes.items():
+        srv.submit(BasecallRequest(signal=_sig(pipe, rng), model=mid))
+    srv.run_until_idle()
+    met = srv.metrics()
+    assert set(met.per_model) == {"small", "large"}
+    for mid in tiny_pipes:
+        pm = met.per_model[mid]
+        assert pm.submitted == 1 and pm.completed == 1 and pm.errors == 0
+        assert pm.occupancy > 0.0
+        assert pm.latency_p99_s >= pm.latency_p50_s >= 0.0
+    names = [r[0] for r in met.rows()]
+    for mid in tiny_pipes:
+        for leaf in ("requests_per_s", "occupancy", "latency_p50_s",
+                     "latency_p99_s", "errors"):
+            assert f"serve/model/{mid}/{leaf}" in names
+    # atomic reset: pool-wide counters AND every per-model slice zero in
+    # the same call — no epoch skew between them
+    srv.reset_metrics()
+    met = srv.metrics()
+    assert met.submitted == 0 and met.completed == 0 and met.errors == 0
+    assert met.per_model == {}
+    assert met.steps == 0 and met.occupancy == 0.0
+
+
+def test_per_model_isolation_under_load(tiny_pipes):
+    """A burst that saturates one tenant's group never borrows the other
+    tenant's lanes, and the starved tenant keeps completing."""
+    srv, _, eng = _server(tiny_pipes, batch_slots=2, max_queue=64)
+    rng = np.random.default_rng(9)
+    futs = {"small": [], "large": []}
+    for _ in range(6):
+        futs["small"].append(srv.submit(BasecallRequest(
+            signal=_sig(tiny_pipes["small"], rng, 4.0), model="small")))
+    futs["large"].append(srv.submit(BasecallRequest(
+        signal=_sig(tiny_pipes["large"], rng, 6.0), model="large")))
+    # drive a few steps: small's group (2 lanes) is saturated, large must
+    # still admit into its own group immediately
+    for _ in range(2):
+        srv.step()
+    small_rng = eng.sched.group_range("small")
+    large_rng = eng.sched.group_range("large")
+    for s in small_rng:
+        if eng.sched.slots[s] is not None:
+            assert eng.sched.slots[s].model == "small"
+    assert any(eng.sched.slots[s] is not None for s in large_rng)
+    for s in large_rng:
+        if eng.sched.slots[s] is not None:
+            assert eng.sched.slots[s].model == "large"
+    srv.run_until_idle()
+    for mid, fs in futs.items():
+        for f in fs:
+            assert f.result().status == "ok", mid
+
+
+# ---------------------------------------------------------------------------
+# single-model engines: model_id routing + registry construction
+# ---------------------------------------------------------------------------
+
+def test_basecall_engine_model_id_routing(tiny_pipes):
+    from repro.serve.basecall_engine import BasecallEngine
+
+    reg = _registry(tiny_pipes)
+    eng = BasecallEngine.from_registry(reg, "small", batch_slots=2)
+    srv = Server(eng)
+    rng = np.random.default_rng(10)
+    sig = _sig(tiny_pipes["small"], rng)
+    ok = srv.submit(BasecallRequest(signal=sig, model="small")).result()
+    assert ok.status == "ok"
+    assert _same_result(ok.value, tiny_pipes["small"].basecall(sig))
+    # unrouted requests still serve (engine default)
+    assert srv.submit(BasecallRequest(signal=sig)).result().status == "ok"
+    bad = srv.submit(BasecallRequest(signal=sig, model="large")).result()
+    assert bad.status == "error" and "unknown model" in bad.error
+    assert srv.metrics().per_model["large"].errors == 1
+
+
+def test_lm_engine_from_registry_and_routing():
+    from repro.core.quant import QuantConfig
+    from repro.models import lm as lm_lib
+    from repro.serve.engine import ServingEngine
+
+    cfg = lm_lib.LMConfig(
+        n_layers=1, d_model=16, n_heads=2, n_kv_heads=2, d_ff=32,
+        vocab_size=32, quant=QuantConfig(enabled=True, bits_w=5, bits_a=5),
+        remat=False)
+    params = lm_lib.init_lm(jax.random.PRNGKey(11), cfg)
+    reg = ModelRegistry()
+    reg.register_lm("lm-a", params, cfg)
+    eng = ServingEngine.from_registry(reg, "lm-a", batch_slots=2, max_len=16)
+    oracle = ServingEngine(params, cfg, batch_slots=2, max_len=16)
+    prompt = np.asarray([1, 2, 3], np.int32)
+    req = LMRequest(prompt=prompt, max_tokens=4, model="lm-a")
+    got = Server(eng).submit(req).result()
+    ref = Server(oracle).submit(LMRequest(prompt=prompt,
+                                          max_tokens=4)).result()
+    assert got.status == "ok" and got.value == ref.value
+    # misrouted LM requests error clearly, counted once
+    srv = Server(eng)
+    bad = srv.submit(LMRequest(prompt=prompt, max_tokens=4,
+                               model="lm-b")).result()
+    assert bad.status == "error" and "unknown model" in bad.error
+    met = srv.metrics()
+    assert met.errors == 1 and met.rejected == 0
+    # a registry entry that is not an LM is rejected at construction
+    reg2 = ModelRegistry()
+    reg2.register("notlm", lambda: np.zeros(4))
+    with pytest.raises(TypeError, match="not an lm"):
+        ServingEngine.from_registry(reg2, "notlm")
+
+
+def test_streaming_engine_model_routing(tiny_pipes):
+    from repro.serve.streaming import StreamingBasecallEngine, StreamRequest
+
+    eng = StreamingBasecallEngine(tiny_pipes["small"], batch_slots=2,
+                                  model_id="small")
+    srv = Server(eng)
+    rng = np.random.default_rng(12)
+    sig = _sig(tiny_pipes["small"], rng, 1.5)
+    chunks = np.array_split(sig, 3)
+    ok = srv.submit(StreamRequest(chunks=chunks, model="small")).result()
+    assert ok.status == "ok"
+    bad = srv.submit(StreamRequest(chunks=chunks, model="large")).result()
+    assert bad.status == "error" and "unknown model" in bad.error
+
+
+def test_multitenant_engine_direct_submit_validates(tiny_pipes):
+    _, _, eng = _server(tiny_pipes)
+    with pytest.raises(ValueError, match="unknown model"):
+        eng.submit(eng.make_request(
+            0, BasecallRequest(signal=np.zeros(8, np.float32),
+                               model="nope")))
